@@ -1,0 +1,36 @@
+"""Shared benchmark utilities (timing, CSV output)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                           "results")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The harness contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(rel_path: str, obj) -> str:
+    path = os.path.join(RESULTS_DIR, rel_path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.seconds * 1e6

@@ -1,0 +1,78 @@
+"""Fig. 5: normalized total cost across the Table II network scenarios,
+GP vs SPOC / LCOF / LPR-SC.
+
+Paper claims to validate:
+  * GP achieves the lowest cost in every scenario,
+  * up to ~50% improvement over LPR-SC (the joint-optimization baseline),
+  * the advantage is larger with queueing (congestion-aware) costs
+    (SW-queue vs SW-linear).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Timer, emit, save_json
+from repro.core import baselines, gp, network
+
+SCENARIOS = ["connected-er", "balanced-tree", "fog", "abilene", "lhc",
+             "geant", "sw-linear", "sw-queue"]
+# input-rate scaling per scenario so the networks operate in the congested
+# regime the paper targets (its absolute rates depend on unpublished
+# simulator units; the *relative* algorithm ordering is the claim)
+RATE = {"connected-er": 2.0, "balanced-tree": 2.0, "fog": 3.5, "abilene": 2.0,
+        "lhc": 2.0, "geant": 2.0, "sw-linear": 1.5, "sw-queue": 1.5}
+# fog's capacities (Table II: s=17, d=20) leave it lightly loaded at 2x —
+# every algorithm already sits at the uncongested optimum — so fog runs at
+# 3.5x to reach the congested regime the paper's Fig. 5 depicts.
+
+
+def run_scenario(name: str, seed: int = 0, iters: int = 250) -> dict:
+    inst = network.table_ii_instance(name, seed=seed, rate_scale=RATE[name])
+    out = {}
+    with Timer() as t:
+        res = gp.solve(inst, alpha=0.1, max_iters=iters)
+    out["GP"] = res.final_cost
+    out["gp_us"] = t.us
+    out["gp_iters"] = res.iterations
+    out["SPOC"] = baselines.spoc(inst, alpha=0.1, max_iters=iters).final_cost
+    out["LCOF"] = baselines.lcof(inst, alpha=0.1, max_iters=iters).final_cost
+    out["LPR-SC"] = baselines.lpr_sc(inst).final_cost
+    worst = max(out[k] for k in ("GP", "SPOC", "LCOF", "LPR-SC"))
+    out["normalized"] = {k: out[k] / worst for k in ("GP", "SPOC", "LCOF", "LPR-SC")}
+    return out
+
+
+def main() -> dict:
+    table = {}
+    for name in SCENARIOS:
+        r = run_scenario(name)
+        table[name] = r
+        emit(f"fig5_{name}_GP", r["gp_us"],
+             "norm=" + "|".join(f"{k}:{v:.3f}" for k, v in r["normalized"].items()))
+    # paper-claim checks (0.5% tolerance: linear-cost scenarios tie exactly
+    # at the shortest-path optimum, which IS the global optimum there)
+    ok_best = all(
+        t["normalized"]["GP"] <= 1.005 * min(
+            t["normalized"][k] for k in ("SPOC", "LCOF", "LPR-SC"))
+        for t in table.values())
+    gain_lpr = max(1 - t["normalized"]["GP"] / max(t["normalized"]["LPR-SC"], 1e-9)
+                   for t in table.values())
+    sw_gap_queue = 1 - table["sw-queue"]["normalized"]["GP"]
+    sw_gap_linear = 1 - table["sw-linear"]["normalized"]["GP"]
+    summary = {
+        "gp_best_everywhere": ok_best,
+        "max_gain_vs_lpr_sc": gain_lpr,
+        "sw_queue_gain": sw_gap_queue,
+        "sw_linear_gain": sw_gap_linear,
+        "queue_gain_exceeds_linear": sw_gap_queue >= sw_gap_linear,
+    }
+    save_json("fig5.json", {"table": table, "summary": summary})
+    emit("fig5_summary", 0.0,
+         f"gp_best={ok_best} max_gain_vs_LPR={gain_lpr:.2f} "
+         f"queue>{sw_gap_linear:.2f}linear={summary['queue_gain_exceeds_linear']}")
+    return {"table": table, "summary": summary}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""GP algorithm scaling: per-iteration wall time vs network/application
+count (complexity table of Section IV), plus the shard_map variant."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Timer, emit, save_json
+from repro.core import distributed, gp, network
+
+
+def time_gp_iteration(inst, reps: int = 5) -> float:
+    phi = gp.init_phi(inst)
+    state = gp._jit_step(inst, phi, 0.05, None, None)   # warm compile
+    with Timer() as t:
+        for _ in range(reps):
+            state = gp._jit_step(inst, state.phi, 0.05, None, None)
+        jax.block_until_ready(state.phi.e)
+    return t.us / reps
+
+
+def main():
+    rows = {}
+    for name in ["abilene", "balanced-tree", "fog", "geant", "sw-queue"]:
+        inst = network.table_ii_instance(name, seed=0)
+        us = time_gp_iteration(inst)
+        rows[name] = {"V": inst.V, "A": inst.A, "S": inst.A * inst.K1,
+                      "us_per_iter": us}
+        emit(f"gp_iter_{name}", us, f"V:{inst.V}|stages:{inst.A * inst.K1}")
+
+    # shard_map distributed GP (1 host device here; the collective pattern
+    # is what the multi-device dry-run exercises)
+    inst = network.table_ii_instance("abilene", seed=0)
+    mesh = jax.make_mesh((1,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    with Timer() as t:
+        res = distributed.solve_sharded(inst, mesh, alpha=0.05, max_iters=30)
+    emit("gp_sharded_30iters", t.us, f"final_cost:{res.cost_history[-1]:.3f}")
+    save_json("gp_scaling.json", rows)
+
+
+if __name__ == "__main__":
+    main()

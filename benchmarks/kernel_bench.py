@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks (interpret mode on CPU; structural numbers —
+real-TPU wall times come from the roofline, not from this host)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                        # compile/warm
+    with Timer() as t:
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args))
+    return t.us / reps
+
+
+def main():
+    # flash attention: kernel (interpret) vs jnp oracle
+    B, S, H, KV, hd = 1, 512, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    t_kern = _time(lambda: ops.flash_attention(q, k, v, causal=True))
+    tq = lambda x: x.transpose(0, 2, 1, 3)
+    rf = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v, causal=True))
+    t_ref = _time(lambda: rf(tq(q), tq(k), tq(v)))
+    emit("kernel_flash_attention_interp", t_kern, f"jnp_ref:{t_ref:.0f}us")
+
+    # chain propagate: kernel vs jnp on the SW-scale problem (90 stages, 128 nodes)
+    Sg, V = 90, 128
+    M = jax.random.uniform(jax.random.PRNGKey(1), (Sg, V, V)) * 0.05
+    src = jax.random.uniform(jax.random.PRNGKey(2), (Sg, V))
+    t0 = jnp.zeros((Sg, V))
+    t_kern = _time(lambda: ops.propagate_step(t0, M, src))
+    rp = jax.jit(ref.propagate_step)
+    t_ref = _time(lambda: rp(t0, M, src))
+    emit("kernel_chain_propagate_interp", t_kern, f"jnp_ref:{t_ref:.0f}us")
+
+    # ssd chunk
+    Bz, nc, Q, Hh, P, N = 1, 4, 128, 4, 64, 64
+    xs = jax.random.split(jax.random.PRNGKey(3), 4)
+    xh = jax.random.normal(xs[0], (Bz, nc, Q, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(xs[1], (Bz, nc, Q, Hh)))
+    A = -jnp.exp(0.2 * jax.random.normal(xs[2], (Hh,)))
+    cum = jnp.cumsum(dt * A[None, None, None], axis=2)
+    BH = 0.3 * jax.random.normal(xs[3], (Bz, nc, Q, Hh, N))
+    CH = 0.3 * jax.random.normal(jax.random.PRNGKey(9), (Bz, nc, Q, Hh, N))
+    t_kern = _time(lambda: ops.ssd_chunk(xh, dt, None, cum, BH, CH))
+    rs = jax.jit(ref.ssd_chunk)
+    t_ref = _time(lambda: rs(xh, dt, cum, BH, CH))
+    emit("kernel_ssd_chunk_interp", t_kern, f"jnp_ref:{t_ref:.0f}us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""§Perf helper: compare baseline dry-run records against optimization
+variants and print before/after roofline terms per hillclimb pair."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit, save_json
+from benchmarks.roofline import analyze
+
+
+def load(path_glob: str) -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(path_glob)):
+        with open(p) as f:
+            r = json.load(f)
+        if "error" not in r and "skipped" not in r:
+            out.append(r)
+    return out
+
+
+def row(rec: dict) -> dict:
+    a = analyze(rec)
+    a["opts"] = rec.get("opts", [])
+    a["mesh_str"] = "x".join(str(v) for v in rec["mesh"].values())
+    return a
+
+
+def main():
+    base = {(r["arch"], r["shape"]): row(r)
+            for r in load(os.path.join(RESULTS_DIR, "dryrun", "*__pod.json"))}
+    rows = []
+    for r in load(os.path.join(RESULTS_DIR, "perf", "*.json")):
+        v = row(r)
+        b = base.get((v["arch"], v["shape"]))
+        if b is None:
+            continue
+        cmp = {
+            "arch": v["arch"], "shape": v["shape"],
+            "variant": "+".join(v["opts"]) or f"mesh{v['mesh_str']}",
+            "mesh": v["mesh_str"],
+        }
+        for term in ("compute_s", "memory_s", "collective_s"):
+            cmp[f"{term}_before"] = b[term]
+            cmp[f"{term}_after"] = v[term]
+            cmp[f"{term}_x"] = b[term] / v[term] if v[term] > 0 else float("inf")
+        cmp["dominant_before"], cmp["dominant_after"] = b["dominant"], v["dominant"]
+        cmp["useful_before"], cmp["useful_after"] = (
+            b["useful_compute_ratio"], v["useful_compute_ratio"])
+        rows.append(cmp)
+        emit(f"perf_{v['arch']}_{v['shape']}_{cmp['variant']}",
+             (v["compute_s"] + v["memory_s"] + v["collective_s"]) * 1e6,
+             f"dom:{b['dominant']}->{v['dominant']}|"
+             f"{b['dominant']}_term_x:{cmp[b['dominant'] + '_s_x']:.1f}")
+    save_json("perf_compare.json", rows)
+    for c in rows:
+        print(f"# {c['arch']} {c['shape']} [{c['variant']} mesh {c['mesh']}]")
+        for term in ("compute_s", "memory_s", "collective_s"):
+            print(f"#   {term}: {c[term + '_before']:.3e} -> "
+                  f"{c[term + '_after']:.3e}  ({c[term + '_x']:.1f}x)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

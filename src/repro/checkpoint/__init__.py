@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    load_checkpoint, restore_latest, save_checkpoint,
+)

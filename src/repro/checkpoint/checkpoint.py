@@ -1,0 +1,73 @@
+"""Checkpointing: msgpack-serialized pytrees with dtype/shape manifest.
+
+Arrays are gathered to host (fully addressable) — adequate for the CPU
+examples; on a real multi-host pod this is where a tensorstore-style
+per-shard writer would slot in (the layout manifest already records the
+tree structure needed for resharded restore).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree, *, step: int = 0) -> str:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [
+            {"shape": list(np.shape(l)), "dtype": str(np.asarray(l).dtype)}
+            for l in leaves
+        ],
+    }
+    blob = msgpack.packb(
+        [np.ascontiguousarray(np.asarray(l)).tobytes() for l in leaves]
+    )
+    fn = os.path.join(path, f"ckpt_{step:08d}")
+    with open(fn + ".msgpack", "wb") as f:
+        f.write(blob)
+    with open(fn + ".json", "w") as f:
+        json.dump(manifest, f)
+    return fn
+
+
+def load_checkpoint(fn: str, like) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    with open(fn + ".msgpack", "rb") as f:
+        raws = msgpack.unpackb(f.read())
+    with open(fn + ".json") as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(like)
+    assert len(leaves) == len(raws), "checkpoint/tree leaf count mismatch"
+    out = []
+    for raw, meta, leaf in zip(raws, manifest["leaves"], leaves):
+        arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])
+        assert tuple(arr.shape) == tuple(np.shape(leaf)), (arr.shape, np.shape(leaf))
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest(path: str, like) -> tuple[Any, int]:
+    cands = sorted(
+        f[:-5] for f in os.listdir(path) if f.endswith(".json") and f.startswith("ckpt_")
+    )
+    if not cands:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    fn = os.path.join(path, cands[-1])
+    with open(fn + ".json") as f:
+        step = json.load(f)["step"]
+    return load_checkpoint(fn, like), step

@@ -1,0 +1,12 @@
+"""Core library: the paper's contribution (delay-optimal service-chain
+forwarding and offloading in collaborative edge computing) as composable
+JAX modules — network model, traffic/marginal computations, optimality
+conditions, the GP algorithm, its baselines and its shard_map distribution.
+"""
+
+from repro.core.network import Instance, build_instance, table_ii_instance  # noqa: F401
+from repro.core.traffic import Phi, flows, total_cost, renormalize  # noqa: F401
+from repro.core.marginals import dD_dphi  # noqa: F401
+from repro.core.conditions import kkt_residual, sufficiency_residual  # noqa: F401
+from repro.core import baselines, chain, costs, gp  # noqa: F401
+from repro.core import marginals as marginals_mod  # noqa: F401

@@ -1,0 +1,96 @@
+"""Baselines of Section V: SPOC, LCOF, LPR-SC.
+
+All three are expressed as restrictions of the GP machinery (direction
+masks), exactly mirroring their definitions:
+
+  * SPOC  — forwarding fixed to the zero-flow shortest path toward d_a per
+            stage; only the offloading split (CPU vs. next hop) is optimized.
+  * LCOF  — all tasks computed at the data sources (phi_c forced for k<K);
+            only the final-result forwarding (stage K) is optimized.
+  * LPR-SC — the joint uncongested routing+offloading solution on the
+            stage-expanded graph (zero-flow marginals), evaluated as-is;
+            it ignores link congestion by construction ([16] extended to
+            service chains).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs, gp
+from repro.core.network import Instance
+from repro.core.traffic import Phi, renormalize, total_cost
+
+
+def _sp_next_hop_mask(inst: Instance) -> jnp.ndarray:
+    """(A,K1,V,V) bool: the single shortest-path next hop toward d_a for
+    each stage, measured with zero-flow marginals L_k * D'(0) (SPOC's
+    'shortest path measured with marginal cost at F_ij = 0')."""
+    Dp0 = jnp.where(
+        inst.adj,
+        costs.marginal(inst.link_kind, jnp.zeros_like(inst.link_param), inst.link_param),
+        jnp.inf,
+    )
+    V = inst.V
+    INF = jnp.float32(1e18)
+
+    def per_app(L_a, dst_a):
+        def per_stage(L_k):
+            base = jnp.where(jnp.arange(V) == dst_a, 0.0, INF)
+            wmat = L_k * Dp0 + 1e-5   # hop tie-break (see gp.expanded_shortest_path)
+
+            def relax(dist, _):
+                return jnp.minimum(dist, jnp.min(wmat + dist[None, :], axis=1)), None
+
+            dist, _ = jax.lax.scan(relax, base, None, length=V)
+            nxt = jnp.argmin(wmat + dist[None, :], axis=1)          # (V,)
+            return jax.nn.one_hot(nxt, V, dtype=bool)
+
+        return jax.vmap(per_stage)(L_a)
+
+    return jax.vmap(per_app)(inst.L, inst.dst)
+
+
+def spoc(inst: Instance, **solve_kwargs) -> gp.GPResult:
+    """Shortest Path Optimal Computation placement."""
+    allowed_e = _sp_next_hop_mask(inst)
+    # start from a feasible point inside the restriction: forward everything
+    # along the shortest path, never compute...
+    phi_e0 = allowed_e.astype(jnp.float32)
+    phi0 = renormalize(inst, Phi(e=phi_e0, c=jnp.zeros_like(inst.r[:, None, :].repeat(inst.K1, 1))))
+    # ... except that intermediate stages must eventually be computed for
+    # the chain to terminate; seed a uniform offload split so every stage
+    # carries finite traffic.
+    phi0 = renormalize(
+        inst,
+        Phi(e=phi0.e * 0.5, c=jnp.where(inst.cpu_allowed()[:, :, None], 0.5, 0.0)),
+    )
+    return gp.solve(inst, phi0, allowed_e=allowed_e, **solve_kwargs)
+
+
+def lcof(inst: Instance, **solve_kwargs) -> gp.GPResult:
+    """Local Computation placement, Optimal Forwarding."""
+    karr = jnp.arange(inst.K1)[None, :]
+    last = karr == inst.n_tasks[:, None]                            # (A,K1)
+    allowed_e = jnp.broadcast_to(
+        last[:, :, None, None] & inst.adj[None, None],
+        (inst.A, inst.K1, inst.V, inst.V),
+    )
+    allowed_c = jnp.broadcast_to(
+        (~last)[:, :, None], (inst.A, inst.K1, inst.V)
+    )
+    phi_c0 = jnp.where(inst.cpu_allowed()[:, :, None], 1.0, 0.0)
+    _, sp_phi = gp.expanded_shortest_path(inst)
+    phi0 = renormalize(inst, Phi(e=jnp.where(last[:, :, None, None], sp_phi.e, 0.0), c=phi_c0))
+    return gp.solve(inst, phi0, allowed_e=allowed_e, allowed_c=allowed_c, **solve_kwargs)
+
+
+def lpr_sc(inst: Instance) -> gp.GPResult:
+    """Linear-Program-Rounded for Service Chains (congestion-oblivious)."""
+    _, phi = gp.expanded_shortest_path(inst)
+    cost = float(total_cost(inst, phi))
+    return gp.GPResult(phi=phi, cost_history=[cost], residual_history=[], iterations=0)
+
+
+ALL_BASELINES = {"SPOC": spoc, "LCOF": lcof, "LPR-SC": lpr_sc}

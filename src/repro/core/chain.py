@@ -1,0 +1,125 @@
+"""Service chains, including chains derived from DNN vertical splits.
+
+The paper's motivating application (Section I, Fig. 1) is a service chain
+of sequential tasks; its headline use case is "DNN with vertical split".
+``chain_from_arch`` makes that concrete for the 10 assigned architectures:
+the layer stack of a model config is cut into ``n_segments`` tasks, the
+inter-segment activation byte-rate gives the stage packet sizes
+``L_(a,k)``, and the per-segment FLOP count gives the computation weights
+``w(a,k)``.  The resulting applications drive the GP optimizer exactly like
+the paper's synthetic chains.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import QUEUE, Instance
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainProfile:
+    """One service-chain application, in network units.
+
+    L[k]  — packet size (bits per request-packet) of stage k, k = 0..K
+    w[k]  — computation workload per packet for task k+1 (w[K] unused)
+    """
+
+    name: str
+    L: np.ndarray
+    w: np.ndarray
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.L) - 1
+
+
+def chain_from_arch(
+    cfg,
+    *,
+    n_segments: int = 3,
+    tokens_per_packet: int = 128,
+    flops_unit: float = 1e12,
+    bits_unit: float = 1e6,
+) -> ChainProfile:
+    """Vertical-split service chain for a model config.
+
+    cfg is a ``repro.configs.base.ModelConfig``.  Stage-0 packets are token
+    ids (or frame/patch embeddings for audio/VLM); stages 1..K-1 are the
+    residual-stream activations between segments; stage K is the output
+    logits-argmax (tiny).  Workloads are the analytic segment FLOPs (the
+    same model the roofline uses), expressed in ``flops_unit``; packet
+    sizes in ``bits_unit``.
+    """
+    from repro.models.flops import layer_flops, embed_bits_per_token
+
+    act_bits = cfg.d_model * 16 * tokens_per_packet          # bf16 residual
+    in_bits = embed_bits_per_token(cfg) * tokens_per_packet
+    out_bits = 32 * tokens_per_packet                        # token ids out
+
+    per_layer = layer_flops(cfg, seq_len=tokens_per_packet) / tokens_per_packet
+    bounds = np.linspace(0, cfg.n_layers, n_segments + 1).round().astype(int)
+    seg_layers = np.diff(bounds)
+
+    L = np.empty(n_segments + 1)
+    L[0] = in_bits / bits_unit
+    L[1:n_segments] = act_bits / bits_unit
+    L[n_segments] = out_bits / bits_unit
+    w = np.zeros(n_segments + 1)
+    w[:n_segments] = seg_layers * per_layer * tokens_per_packet / flops_unit
+    return ChainProfile(name=cfg.name, L=L, w=w)
+
+
+def instance_from_chains(
+    adj: np.ndarray,
+    chains: Sequence[ChainProfile],
+    *,
+    sources: Sequence[Sequence[int]],
+    rates: Sequence[Sequence[float]],
+    dests: Sequence[int],
+    link_capacity: float | np.ndarray = 100.0,
+    comp_capacity: float | np.ndarray = 50.0,
+    link_kind: int = QUEUE,
+    comp_kind: int = QUEUE,
+    wnode: np.ndarray | None = None,
+) -> Instance:
+    """Build an Instance whose applications are the given chains."""
+    V = adj.shape[0]
+    A = len(chains)
+    K1 = max(c.n_tasks for c in chains) + 1
+
+    L = np.zeros((A, K1))
+    w = np.zeros((A, K1))
+    stage_mask = np.zeros((A, K1), dtype=bool)
+    n_tasks = np.zeros(A, dtype=np.int64)
+    r = np.zeros((A, V))
+    for a, c in enumerate(chains):
+        k1 = c.n_tasks + 1
+        L[a, :k1] = c.L
+        w[a, :k1] = c.w
+        stage_mask[a, :k1] = True
+        n_tasks[a] = c.n_tasks
+        for s, rate in zip(sources[a], rates[a]):
+            r[a, s] += rate
+
+    link_param = np.where(adj, np.broadcast_to(np.asarray(link_capacity, dtype=float), (V, V)), 0.0)
+    comp_param = np.broadcast_to(np.asarray(comp_capacity, dtype=float), (V,))
+
+    return Instance(
+        adj=jnp.asarray(adj),
+        link_param=jnp.asarray(link_param, dtype=jnp.float32),
+        link_kind=link_kind,
+        comp_param=jnp.asarray(comp_param, dtype=jnp.float32),
+        comp_kind=comp_kind,
+        L=jnp.asarray(L, dtype=jnp.float32),
+        w=jnp.asarray(w, dtype=jnp.float32),
+        wnode=jnp.asarray(wnode if wnode is not None else np.ones(V), dtype=jnp.float32),
+        r=jnp.asarray(r, dtype=jnp.float32),
+        dst=jnp.asarray(dests),
+        n_tasks=jnp.asarray(n_tasks),
+        stage_mask=jnp.asarray(stage_mask),
+    )

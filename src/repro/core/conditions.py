@@ -1,0 +1,56 @@
+"""Optimality-condition checkers: KKT (5) and the sufficiency condition (6).
+
+Both conditions compare per-direction marginals against the per-(i,a,k)
+minimum:
+
+  * KKT (5) uses dD/dphi_ij = t_i * delta_ij  — necessary only, degenerate
+    (automatically satisfied) wherever t_i(a,k) = 0 (Proposition 1).
+  * Sufficiency (6) uses the modified marginals delta_ij directly — if it
+    holds everywhere, phi is globally optimal (Theorem 1).
+
+The checkers return a *residual*: the largest amount by which a direction
+carrying flow exceeds the minimum marginal.  A strategy satisfies the
+condition iff its residual is ~0.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.marginals import BIG, marginals
+from repro.core.network import Instance
+from repro.core.traffic import Phi, flows
+
+
+def _residual(min_margin, margin_e, margin_c, phi: Phi, active_eps: float) -> jnp.ndarray:
+    """Max excess (margin - min) over directions with phi > active_eps."""
+    exc_e = jnp.where(phi.e > active_eps, margin_e - min_margin[..., None], 0.0)
+    exc_c = jnp.where(phi.c > active_eps, margin_c - min_margin, 0.0)
+    return jnp.maximum(jnp.max(exc_e), jnp.max(exc_c))
+
+
+def kkt_residual(inst: Instance, phi: Phi, active_eps: float = 1e-6) -> jnp.ndarray:
+    """Residual of the KKT necessary condition (5).  0 <=> (5) holds."""
+    fl = flows(inst, phi)
+    m = marginals(inst, phi, fl)
+    ge = fl.t[..., None] * jnp.where(m.delta_e < BIG, m.delta_e, 0.0)
+    gc = fl.t * jnp.where(m.delta_c < BIG, m.delta_c, 0.0)
+    ge = jnp.where(m.delta_e < BIG, ge, BIG)
+    gc = jnp.where(m.delta_c < BIG, gc, BIG)
+    min_margin = jnp.minimum(ge.min(-1), gc)                 # (A,K1,V)
+    return _residual(min_margin, ge, gc, phi, active_eps)
+
+
+def sufficiency_residual(inst: Instance, phi: Phi, active_eps: float = 1e-6) -> jnp.ndarray:
+    """Residual of the sufficiency condition (6).  0 <=> global optimum."""
+    m = marginals(inst, phi)
+    min_margin = jnp.minimum(m.delta_e.min(-1), m.delta_c)   # (A,K1,V)
+    return _residual(min_margin, m.delta_e, m.delta_c, phi, active_eps)
+
+
+def satisfies_sufficiency(inst: Instance, phi: Phi, tol: float = 1e-3) -> bool:
+    return bool(sufficiency_residual(inst, phi) <= tol)
+
+
+def satisfies_kkt(inst: Instance, phi: Phi, tol: float = 1e-3) -> bool:
+    return bool(kkt_residual(inst, phi) <= tol)

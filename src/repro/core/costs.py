@@ -1,0 +1,82 @@
+"""Congestion-dependent link/computation cost families (Section II).
+
+The paper requires cost functions that are increasing, continuously
+differentiable and convex with D(0) = 0.  We provide:
+
+  * LINEAR:  D(F) = d * F          (pure transmission delay)
+  * QUEUE:   D(F) = F / (d - F)    (M/M/1 expected queue occupancy)
+
+The M/M/1 family is only finite for F < d.  Following standard practice in
+flow-level optimization (and so that *any* feasible phi has finite cost and
+finite gradients — needed by the GP algorithm to recover from congested
+iterates), we extend it above ``theta * d`` with its second-order Taylor
+model, which keeps the extension C^1, convex, and increasing.  This is an
+implementation detail, not a model change: at the optimum all flows lie in
+the un-extended region whenever the instance is feasible.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LINEAR = 0
+QUEUE = 1
+
+# Fraction of capacity above which the M/M/1 cost switches to its quadratic
+# Taylor extension.
+_THETA = 0.98
+
+
+# Taylor data at the knee F = theta*cap, written with the cap powers
+# cancelled analytically so no intermediate under/overflows in float32
+# (cap can be ~0 on non-links):
+#   value  v  = theta / (1-theta)
+#   slope  d1 = 1 / (cap (1-theta)^2)
+#   curv   d2 = 2 / (cap^2 (1-theta)^3)
+_V_KNEE = _THETA / (1.0 - _THETA)
+_S1 = 1.0 / (1.0 - _THETA) ** 2
+_S2 = 2.0 / (1.0 - _THETA) ** 3
+
+
+def _queue_cost(F: jnp.ndarray, cap: jnp.ndarray) -> jnp.ndarray:
+    """M/M/1 queue length F/(cap-F), quadratically extended above theta*cap."""
+    cap = jnp.maximum(cap, 1e-6)
+    knee = _THETA * cap
+    inside = F / jnp.maximum(cap - F, 1e-12)
+    u = (F - knee) / cap                      # normalized overload
+    outside = _V_KNEE + _S1 * u + 0.5 * _S2 * u * u
+    return jnp.where(F <= knee, inside, outside)
+
+
+def _queue_marginal(F: jnp.ndarray, cap: jnp.ndarray) -> jnp.ndarray:
+    cap = jnp.maximum(cap, 1e-6)
+    knee = _THETA * cap
+    inside = cap / jnp.maximum(cap - F, 1e-12) ** 2
+    u = (F - knee) / cap
+    outside = (_S1 + _S2 * u) / cap
+    return jnp.where(F <= knee, inside, outside)
+
+
+def cost(kind: int, F: jnp.ndarray, param: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise cost D(F) (or C(G)) for the given family."""
+    if kind == LINEAR:
+        return param * F
+    if kind == QUEUE:
+        return _queue_cost(F, param)
+    raise ValueError(f"unknown cost kind {kind}")
+
+
+def marginal(kind: int, F: jnp.ndarray, param: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise marginal cost D'(F) for the given family."""
+    if kind == LINEAR:
+        return param * jnp.ones_like(F)
+    if kind == QUEUE:
+        return _queue_marginal(F, param)
+    raise ValueError(f"unknown cost kind {kind}")
+
+
+def saturated(kind: int, F: jnp.ndarray, param: jnp.ndarray) -> jnp.ndarray:
+    """Bool mask of links/CPUs operating beyond the modelled region."""
+    if kind == LINEAR:
+        return jnp.zeros_like(F, dtype=bool)
+    return F > _THETA * param

@@ -1,0 +1,319 @@
+"""Algorithm 1: distributed Gradient Projection (GP) for problem (2).
+
+Per iteration (time slot), every node i and stage (a,k):
+
+  1. obtains dD/dt via the marginal-cost broadcast (here: the synchronous
+     fixed-point sweep in ``marginals.pdt_recursion``),
+  2. computes modified marginals delta_ij(a,k) (eq. 7),
+  3. computes the blocked node set B_i(a,k) (loop-freedom),
+  4. moves phi mass from blocked/high-delta directions onto the min-delta
+     direction(s) with stepsize alpha (eqs. 8-10).
+
+The update is a masked, vectorized computation over the whole (A,K1,V,V(+1))
+strategy tensor — jit-compiled, and shard_mappable over stages
+(``core/distributed.py``).  ``allowed_e`` / ``allowed_c`` masks restrict the
+direction set, which is how the SPOC / LCOF baselines reuse this machinery
+(``core/baselines.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.marginals import BIG, Marginals, marginals
+from repro.core.network import Instance
+from repro.core.traffic import (
+    Phi, flows, renormalize, total_cost, traffic_is_valid,
+)
+
+_TIE_EPS = 1e-6      # directions within this of the min-delta receive mass
+_BLOCK_EPS = 1e-7    # strictness slack for pdt comparisons
+
+
+class GPState(NamedTuple):
+    phi: Phi
+    cost: jnp.ndarray
+    residual: jnp.ndarray    # sufficiency-condition residual (0 => optimal)
+
+
+@dataclasses.dataclass
+class GPResult:
+    phi: Phi
+    cost_history: list
+    residual_history: list
+    iterations: int
+
+    @property
+    def final_cost(self) -> float:
+        return float(self.cost_history[-1])
+
+
+# ---------------------------------------------------------------------------
+# Blocked node sets
+# ---------------------------------------------------------------------------
+
+def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray) -> jnp.ndarray:
+    """(A,K1,V,V) bool: j in B_i(a,k).
+
+    j is blocked for i at stage (a,k) if (Section IV "Blocked node set"):
+      1) (i,j) not in E, or
+      2) dD/dt_j(a,k) > dD/dt_i(a,k), or
+      3) j's routing subtree for (a,k) contains an improper link (p,q)
+         with dD/dt_q > dD/dt_p.
+
+    Category 3 ("tagged" nodes) is computed by reverse boolean propagation
+    along the routing DAG — at most V sweeps, vectorized over (A,K1).
+    """
+    route = phi.e > 0.0                                         # (A,K1,V,V)
+    worse = pdt[:, :, None, :] > pdt[:, :, :, None] + _BLOCK_EPS  # pdt_q > pdt_p
+    improper = route & worse
+
+    def sweep(tagged, _):
+        # tagged_p = exists q: route[p,q] and (improper[p,q] or tagged[q])
+        hit = improper | (route & tagged[:, :, None, :])
+        return jnp.any(hit, axis=-1), None
+
+    tagged0 = jnp.zeros(pdt.shape, dtype=bool)
+    tagged, _ = jax.lax.scan(sweep, tagged0, None, length=inst.V)
+
+    blocked = (~inst.adj[None, None]) | improper | worse | tagged[:, :, None, :]
+    return blocked
+
+
+# ---------------------------------------------------------------------------
+# One GP iteration (eqs. 8-10)
+# ---------------------------------------------------------------------------
+
+# Backtracking multipliers tried each iteration (vmapped inside the jitted
+# step).  The paper assumes a "sufficiently small" fixed alpha (Theorem 2 /
+# [11]); with congestion-level queue marginals (D' ~ 1e6 near saturation) a
+# fixed alpha either diverges or crawls, so we evaluate the same projection
+# direction at several stepsizes and keep the best — a monotone-descent
+# safeguard that preserves the convergence argument (descent + stationarity
+# of condition (6)).  Multiplier 0 is included so the cost never increases.
+_ALPHA_LADDER = tuple(4.0 ** (1 - k) for k in range(11)) + (0.0,)
+
+
+def gp_step(
+    inst: Instance,
+    phi: Phi,
+    alpha: float,
+    allowed_e: Optional[jnp.ndarray] = None,
+    allowed_c: Optional[jnp.ndarray] = None,
+    scaled: bool = False,
+) -> GPState:
+    fl = flows(inst, phi)
+    m = marginals(inst, phi, fl)
+
+    avail_e = inst.adj[None, None] & ~blocked_sets(inst, phi, m.pdt)
+    if allowed_e is not None:
+        avail_e = avail_e & allowed_e
+    avail_c = inst.cpu_allowed()[:, :, None]
+    if allowed_c is not None:
+        avail_c = avail_c & allowed_c
+
+    delta_e = jnp.where(avail_e, m.delta_e, BIG)
+    delta_c = jnp.where(avail_c, m.delta_c, BIG)
+    min_delta = jnp.minimum(delta_e.min(-1), delta_c)           # (A,K1,V)
+
+    # Fallback guard: if blocking removed every direction at a row that must
+    # forward (can happen transiently on congested iterates), fall back to
+    # the unblocked-by-topology direction set for that row.
+    stuck = min_delta >= BIG / 2
+    fb_e = jnp.where(inst.adj[None, None] & (allowed_e if allowed_e is not None else True), m.delta_e, BIG)
+    fb_c = jnp.where(inst.cpu_allowed()[:, :, None] & (allowed_c if allowed_c is not None else True), m.delta_c, BIG)
+    delta_e = jnp.where(stuck[..., None], fb_e, delta_e)
+    delta_c = jnp.where(stuck, fb_c, delta_c)
+    min_delta = jnp.minimum(delta_e.min(-1), delta_c)
+
+    e_e = delta_e - min_delta[..., None]                        # e_ij >= 0
+    e_c = delta_c - min_delta
+    if scaled:
+        # quasi-Newton diagonal scaling (the second-order speedup the paper
+        # attributes to [5]): normalize the projection step by a curvature
+        # surrogate so stepsizes are comparable across congestion levels.
+        # D'' of the M/M/1 cost ~ 2 D'/(cap-F) ~ D'^2-scale; we use the
+        # per-row marginal magnitude as the diagonal preconditioner.
+        scale_row = jnp.maximum(jnp.abs(min_delta), 1e-6)
+        e_e = e_e / scale_row[..., None]
+        e_c = e_c / scale_row
+
+    is_min_e = (e_e <= _TIE_EPS) & (delta_e < BIG / 2)
+    is_min_c = (e_c <= _TIE_EPS) & (delta_c < BIG / 2)
+    N = is_min_e.sum(-1) + is_min_c                             # (A,K1,V)
+
+    # reductions: blocked directions surrender everything; positive-e
+    # directions surrender min(phi, alpha * e)   (eq. 9)
+    def apply(a):
+        red_e = jnp.where(
+            delta_e >= BIG / 2, phi.e,
+            jnp.where(is_min_e, 0.0, jnp.minimum(phi.e, a * e_e)),
+        )
+        red_c = jnp.where(
+            delta_c >= BIG / 2, phi.c,
+            jnp.where(is_min_c, 0.0, jnp.minimum(phi.c, a * e_c)),
+        )
+        share = (red_e.sum(-1) + red_c) / jnp.maximum(N, 1)     # (A,K1,V)
+        cand = renormalize(inst, Phi(
+            e=phi.e - red_e + share[..., None] * is_min_e,
+            c=phi.c - red_c + share * is_min_c,
+        ))
+        cand_fl = flows(inst, cand)
+        valid = traffic_is_valid(inst, cand_fl.t)
+        c_links = jnp.where(inst.adj, costs.cost(inst.link_kind, cand_fl.F, inst.link_param), 0.0)
+        c_nodes = costs.cost(inst.comp_kind, cand_fl.G, inst.comp_param)
+        cost = jnp.sum(c_links) + jnp.sum(c_nodes)
+        return cand, jnp.where(valid, cost, jnp.inf)
+
+    ladder = alpha * jnp.asarray(_ALPHA_LADDER, dtype=jnp.float32)
+    cands, cand_costs = jax.vmap(apply)(ladder)
+    # a too-aggressive candidate can form a routing loop -> divergent traffic
+    # fixed point -> inf/NaN cost; such candidates must lose the argmin
+    cand_costs = jnp.where(jnp.isnan(cand_costs), jnp.inf, cand_costs)
+    best = jnp.argmin(cand_costs)
+    new_phi = jax.tree_util.tree_map(lambda x: x[best], cands)
+
+    # residual of sufficiency condition (6) at the *new* iterate, computed
+    # cheaply from the current marginals (exact residual is recomputed by
+    # the caller when it matters)
+    exc_e = jnp.where(phi.e > 1e-6, m.delta_e - min_delta[..., None], 0.0)
+    exc_c = jnp.where(phi.c > 1e-6, m.delta_c - min_delta, 0.0)
+    residual = jnp.maximum(jnp.max(exc_e), jnp.max(exc_c))
+
+    return GPState(phi=new_phi, cost=cand_costs[best], residual=residual)
+
+
+# ---------------------------------------------------------------------------
+# Initial strategies (loop-free, finite cost)
+# ---------------------------------------------------------------------------
+
+def _zero_flow_weights(inst: Instance) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Link and CPU marginals at zero flow (the 'uncongested' metrics)."""
+    Dp0 = jnp.where(
+        inst.adj,
+        costs.marginal(inst.link_kind, jnp.zeros_like(inst.link_param), inst.link_param),
+        jnp.inf,
+    )
+    Cp0 = costs.marginal(inst.comp_kind, jnp.zeros_like(inst.comp_param), inst.comp_param)
+    return Dp0, Cp0
+
+
+def expanded_shortest_path(inst: Instance) -> tuple[jnp.ndarray, Phi]:
+    """Stage-expanded single-destination shortest paths at zero flow.
+
+    Returns (dist, phi) where dist[a,k,i] is the min uncongested cost-to-go
+    from (i, stage k) to (d_a, stage K_a), and phi routes integrally along
+    the argmin successors.  This is simultaneously:
+      * the LPR-SC baseline (joint uncongested routing + offloading), and
+      * the default loop-free initialization for GP.
+    """
+    Dp0, Cp0 = _zero_flow_weights(inst)
+    V, K1 = inst.V, inst.K1
+    INF = jnp.float32(1e18)
+
+    def per_app(L_a, w_a, dst_a, ntask_a):
+        def stage(dist_next, xs):
+            k, L_k, w_k = xs
+            is_last = k == ntask_a
+            # absorbing cost: at the last stage, reaching dst ends the chain
+            comp = jnp.where(is_last, INF, w_k * inst.wnode * Cp0 + dist_next)
+            at_dst = jnp.arange(V) == dst_a
+            base = jnp.where(is_last & at_dst, 0.0, comp)
+            # tiny per-hop epsilon: breaks ties toward fewer hops so the
+            # argmin successor graph is acyclic even at zero packet size
+            wmat = L_k * Dp0 + 1e-5              # (V,V) link weights, inf off-graph
+
+            def relax(dist, _):
+                via = jnp.min(wmat + dist[None, :], axis=1)
+                return jnp.minimum(dist, via), None
+
+            dist, _ = jax.lax.scan(relax, base, None, length=V)
+            return dist, dist
+
+        ks = jnp.arange(K1)
+        _, dists = jax.lax.scan(
+            stage, jnp.full((V,), INF), (ks, L_a, w_a), reverse=True
+        )
+        return dists                              # (K1, V)
+
+    dist = jax.vmap(per_app)(inst.L, inst.w, inst.dst, inst.n_tasks)  # (A,K1,V)
+
+    # successor choice: CPU (cost w*C'0 + dist[k+1,i]) vs each link
+    dist_next = jnp.concatenate([dist[:, 1:], jnp.full_like(dist[:, :1], 1e18)], axis=1)
+    cand_c = jnp.where(
+        inst.cpu_allowed()[:, :, None],
+        inst.w[:, :, None] * inst.wnode[None, None] * Cp0[None, None] + dist_next,
+        INF,
+    )
+    cand_e = jnp.where(
+        inst.adj[None, None],
+        inst.L[:, :, None, None] * Dp0[None, None] + 1e-5 + dist[:, :, None, :],
+        INF,
+    )
+    all_cand = jnp.concatenate([cand_c[..., None], cand_e], axis=-1)  # (A,K1,V,1+V)
+    best = jnp.argmin(all_cand, axis=-1)
+    phi_c = (best == 0).astype(jnp.float32)
+    phi_e = jax.nn.one_hot(best - 1, V, dtype=jnp.float32) * (best > 0)[..., None]
+    phi = renormalize(inst, Phi(e=phi_e, c=phi_c))
+    return dist, phi
+
+
+def init_phi(inst: Instance) -> Phi:
+    """Default loop-free initial strategy with finite cost."""
+    _, phi = expanded_shortest_path(inst)
+    return phi
+
+
+# ---------------------------------------------------------------------------
+# Solver driver
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("scaled",))
+def _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled=False):
+    return gp_step(inst, phi, alpha, allowed_e, allowed_c, scaled)
+
+
+def solve(
+    inst: Instance,
+    phi0: Optional[Phi] = None,
+    *,
+    alpha: float = 0.02,
+    max_iters: int = 400,
+    tol: float = 1e-4,
+    allowed_e: Optional[jnp.ndarray] = None,
+    allowed_c: Optional[jnp.ndarray] = None,
+    track_every: int = 1,
+    patience: int = 40,
+    scaled: bool = False,
+) -> GPResult:
+    """Run Algorithm 1 until the sufficiency residual falls below tol.
+
+    scaled=True enables the quasi-Newton diagonal preconditioner (paper
+    Section IV remark on second-order methods)."""
+    phi = phi0 if phi0 is not None else init_phi(inst)
+    cost_hist = [float(total_cost(inst, phi))]
+    res_hist = []
+    it = 0
+    best_cost, stall = float(cost_hist[0]), 0
+    for it in range(1, max_iters + 1):
+        state = _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled)
+        phi = state.phi
+        c, r = float(state.cost), float(state.residual)
+        if it % track_every == 0:
+            cost_hist.append(c)
+            res_hist.append(r)
+        if r <= tol:
+            break
+        if c < best_cost * (1 - 1e-6):
+            best_cost, stall = c, 0
+        else:
+            stall += 1
+            if stall >= patience:
+                break   # ladder-stationary: no stepsize makes progress
+    return GPResult(phi=phi, cost_history=cost_hist, residual_history=res_hist, iterations=it)

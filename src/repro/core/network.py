@@ -1,0 +1,341 @@
+"""Network model for collaborative edge computing (CEC).
+
+Implements the directed-graph network model of Section II of
+"Delay-Optimal Service Chain Forwarding and Offloading in Collaborative
+Edge Computing" (Zhang & Yeh, 2023), plus the seven evaluation topologies
+of Table II.
+
+A :class:`Instance` bundles everything problem (2) needs:
+  * the directed graph (adjacency mask),
+  * per-link cost parameters (capacity / linear coefficient),
+  * per-node computation cost parameters,
+  * the application set: chains, packet sizes ``L_(a,k)``, computation
+    weights ``w(a,k)``, input rates ``r_i(a)`` and destinations ``d_a``.
+
+Everything is stored as dense JAX arrays so the optimization core can be
+jitted / vmapped / shard_mapped.  Networks in the paper are small
+(|V| <= 100), so dense (V,V) representations are the right trade-off.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+
+from repro.core import costs
+
+# Cost-family identifiers (match repro.core.costs).
+LINEAR = costs.LINEAR
+QUEUE = costs.QUEUE
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    """A complete CEC service-chain forwarding/offloading problem instance.
+
+    Registered as a JAX pytree (cost-family kinds are static metadata), so
+    instances can flow through jit/vmap/shard_map directly.
+
+    Shapes: V = #nodes, A = #applications, K1 = max(|T_a|) + 1 stages.
+    """
+
+    # --- graph ---
+    adj: jnp.ndarray            # (V, V) bool, adj[i, j] == (i, j) in E
+    link_param: jnp.ndarray     # (V, V) float, capacity (QUEUE) or coeff (LINEAR)
+    link_kind: int              # costs.LINEAR or costs.QUEUE
+    comp_param: jnp.ndarray     # (V,) float, CPU capacity (QUEUE) or coeff
+    comp_kind: int
+    # --- applications ---
+    L: jnp.ndarray              # (A, K1) packet size of stage (a, k) [bits]
+    w: jnp.ndarray              # (A, K1) computation weight of task k+1 on a
+    #     w[a, k] is the workload for computing task k+1 on one stage-k
+    #     packet; w[a, K_a] is unused (final results are not computed).
+    wnode: jnp.ndarray          # (V,) per-node workload multiplier (heterogeneity)
+    r: jnp.ndarray              # (A, V) exogenous input rate of application a at i
+    dst: jnp.ndarray            # (A,) int destination node d_a
+    n_tasks: jnp.ndarray        # (A,) int |T_a|
+    stage_mask: jnp.ndarray     # (A, K1) bool, valid stages k <= |T_a|
+
+    @property
+    def V(self) -> int:
+        return int(self.adj.shape[0])
+
+    @property
+    def A(self) -> int:
+        return int(self.L.shape[0])
+
+    @property
+    def K1(self) -> int:
+        return int(self.L.shape[1])
+
+    def degenerate_mask(self) -> jnp.ndarray:
+        """(A, K1, V) bool — True where phi must sum to 0 (eq. (1) lower branch).
+
+        Stage K_a at the destination node is the exit of the network.
+        """
+        A, K1, V = self.A, self.K1, self.V
+        karr = jnp.arange(K1)[None, :, None]             # (1, K1, 1)
+        is_last = karr == self.n_tasks[:, None, None]     # (A, K1, 1)
+        is_dst = (jnp.arange(V)[None, None, :] == self.dst[:, None, None])
+        return (is_last & is_dst) | ~self.stage_mask[:, :, None]
+
+    def cpu_allowed(self) -> jnp.ndarray:
+        """(A, K1) bool — whether phi_{i0}(a,k) may be nonzero (k < |T_a|)."""
+        karr = jnp.arange(self.K1)[None, :]
+        return (karr < self.n_tasks[:, None]) & self.stage_mask
+
+
+jax.tree_util.register_dataclass(
+    Instance,
+    data_fields=[
+        "adj", "link_param", "comp_param", "L", "w", "wnode", "r", "dst",
+        "n_tasks", "stage_mask",
+    ],
+    meta_fields=["link_kind", "comp_kind"],
+)
+
+
+# ---------------------------------------------------------------------------
+# Topologies (Table II)
+# ---------------------------------------------------------------------------
+
+def _to_directed_arrays(g: nx.Graph) -> np.ndarray:
+    """Undirected graph -> dense bool adjacency with both directions."""
+    n = g.number_of_nodes()
+    g = nx.convert_node_labels_to_integers(g)
+    adj = np.zeros((n, n), dtype=bool)
+    for u, v in g.edges():
+        adj[u, v] = True
+        adj[v, u] = True
+    return adj
+
+
+def connected_er(n: int = 20, m: int = 40, seed: int = 0) -> np.ndarray:
+    """Connectivity-guaranteed Erdos-Renyi graph with n nodes and m edges."""
+    rng = np.random.default_rng(seed)
+    for trial in range(10_000):
+        g = nx.gnm_random_graph(n, m, seed=int(rng.integers(1 << 31)))
+        if nx.is_connected(g):
+            return _to_directed_arrays(g)
+    raise RuntimeError("could not sample a connected ER graph")
+
+
+def balanced_tree(r: int = 2, h: int = 3) -> np.ndarray:
+    """Complete binary tree: r=2, h=3 -> 15 nodes / 14 edges (Table II)."""
+    return _to_directed_arrays(nx.balanced_tree(r, h))
+
+
+def fog(seed: int = 0) -> np.ndarray:
+    """A 3-tier fog-computing sample topology, 19 nodes / 30 edges.
+
+    Tier 0: cloud (node 0). Tier 1: 6 edge servers (1..6) in a ring, each
+    linked to the cloud. Tier 2: 12 devices (7..18), each linked to one
+    server; 6 extra device-device D2D links. 6+6+12+6 = 30 edges.
+    """
+    g = nx.Graph()
+    g.add_nodes_from(range(19))
+    for s in range(1, 7):
+        g.add_edge(0, s)                        # cloud <-> server (6)
+    for s in range(1, 7):
+        g.add_edge(s, 1 + (s % 6))              # server ring (6)
+    for d in range(7, 19):
+        g.add_edge(d, 1 + (d - 7) % 6)          # device -> server (12)
+    for d in range(7, 19, 2):
+        g.add_edge(d, 7 + (d - 7 + 3) % 12)     # D2D links (6)
+    assert g.number_of_nodes() == 19 and g.number_of_edges() == 30
+    return _to_directed_arrays(g)
+
+
+def abilene() -> np.ndarray:
+    """Abilene (Internet2 predecessor): 11 nodes / 14 edges."""
+    edges = [
+        (0, 1), (0, 2), (1, 2), (1, 3), (2, 4), (3, 4), (3, 5), (4, 6),
+        (5, 6), (5, 7), (6, 8), (7, 9), (8, 9), (9, 10),
+    ]
+    g = nx.Graph(edges)
+    assert g.number_of_nodes() == 11 and g.number_of_edges() == 14
+    return _to_directed_arrays(g)
+
+
+def lhc(seed: int = 7) -> np.ndarray:
+    """LHC computing-grid-like topology, 16 nodes / 31 edges.
+
+    The paper does not give the edge list; we use a deterministic
+    tier-0/tier-1/tier-2 grid-like construction with the same |V|, |E|.
+    """
+    g = nx.Graph()
+    g.add_nodes_from(range(16))
+    # tier-0 hub (CERN-like): node 0 fully linked to tier-1 (1..5)
+    for t1 in range(1, 6):
+        g.add_edge(0, t1)                       # 5
+    for t1 in range(1, 6):
+        g.add_edge(t1, 1 + (t1 % 5))            # tier-1 ring, 5
+    # tier-2 sites 6..15, each dual-homed to two tier-1 sites
+    for t2 in range(6, 16):
+        g.add_edge(t2, 1 + (t2 - 6) % 5)        # 10
+        g.add_edge(t2, 1 + (t2 - 6 + 2) % 5)    # 10
+    # one transatlantic-style shortcut
+    g.add_edge(6, 11)
+    assert g.number_of_nodes() == 16 and g.number_of_edges() == 31
+    return _to_directed_arrays(g)
+
+
+def geant(seed: int = 11) -> np.ndarray:
+    """GEANT-like pan-European topology, 22 nodes / 33 edges.
+
+    Paper cites GEANT with |V|=22, |E|=33; exact edge list is not given, so
+    we use a deterministic ring + chords construction matching the counts.
+    """
+    g = nx.Graph()
+    n = 22
+    g.add_nodes_from(range(n))
+    for i in range(n):
+        g.add_edge(i, (i + 1) % n)              # backbone ring, 22
+    chords = [(0, 5), (2, 9), (4, 13), (6, 17), (8, 15), (10, 19),
+              (12, 21), (1, 14), (3, 18), (7, 20), (11, 16)]
+    for u, v in chords:                          # 11 chords -> 33 edges
+        g.add_edge(u, v)
+    assert g.number_of_nodes() == 22 and g.number_of_edges() == 33
+    return _to_directed_arrays(g)
+
+
+def small_world(n: int = 100, seed: int = 3) -> np.ndarray:
+    """SW: ring-like graph with short- and long-range edges, 100/320."""
+    g = nx.Graph()
+    g.add_nodes_from(range(n))
+    for i in range(n):
+        g.add_edge(i, (i + 1) % n)              # ring, 100
+        g.add_edge(i, (i + 2) % n)              # short-range, 100
+        g.add_edge(i, (i + 3) % n)              # short-range, 100
+    rng = np.random.default_rng(seed)
+    added = 0
+    while added < 20:                            # long-range, 20 -> 320 total
+        u, v = rng.integers(0, n, size=2)
+        if u != v and not g.has_edge(u, v):
+            g.add_edge(u, v)
+            added += 1
+    assert g.number_of_nodes() == 100 and g.number_of_edges() == 320
+    return _to_directed_arrays(g)
+
+
+TOPOLOGIES = {
+    "connected-er": lambda: connected_er(20, 40, seed=0),
+    "balanced-tree": lambda: balanced_tree(2, 3),
+    "fog": fog,
+    "abilene": abilene,
+    "lhc": lhc,
+    "geant": geant,
+    "sw": small_world,
+}
+
+
+# ---------------------------------------------------------------------------
+# Instance builders
+# ---------------------------------------------------------------------------
+
+def build_instance(
+    adj: np.ndarray,
+    *,
+    n_apps: int,
+    n_tasks: int = 2,
+    n_sources: int = 3,
+    link_kind: int = QUEUE,
+    comp_kind: int = QUEUE,
+    link_mean: float = 10.0,
+    comp_mean: float = 12.0,
+    rate_lo: float = 0.5,
+    rate_hi: float = 1.5,
+    packet_sizes: Optional[np.ndarray] = None,   # (K1,) default 10 - 5k
+    comp_weight: float = 1.0,
+    seed: int = 0,
+    heterogeneity: float = 0.3,
+) -> Instance:
+    """Build a random instance in the style of Table II.
+
+    Link/CPU parameters are u.a.r. in [1-h, 1+h] * mean; application input
+    rates u.a.r. in [rate_lo, rate_hi] at ``n_sources`` random source nodes.
+    Packet sizes default to the paper's ``L_(a,k) = 10 - 5k``.
+    """
+    rng = np.random.default_rng(seed)
+    V = adj.shape[0]
+    K1 = n_tasks + 1
+
+    link_param = np.where(
+        adj,
+        link_mean * rng.uniform(1 - heterogeneity, 1 + heterogeneity, (V, V)),
+        0.0,
+    )
+    comp_param = comp_mean * rng.uniform(1 - heterogeneity, 1 + heterogeneity, V)
+
+    if packet_sizes is None:
+        # Paper: L_(a,k) = 10 - 5k.  For |T_a| = 2 this makes the final
+        # result size exactly 0, which admits zero-cost routing loops (any
+        # strategy is tied).  We floor packet sizes at 0.01 — cost impact
+        # is O(eps), but it removes the degeneracy (DESIGN.md §8).
+        packet_sizes = np.array([10.0 - 5.0 * k for k in range(K1)])
+    packet_sizes = np.maximum(np.asarray(packet_sizes, dtype=np.float64), 0.01)
+    L = np.tile(np.asarray(packet_sizes, dtype=np.float64)[None, :], (n_apps, 1))
+
+    w = np.full((n_apps, K1), comp_weight, dtype=np.float64)
+    w[:, -1] = 0.0                                # final stage is never computed
+
+    r = np.zeros((n_apps, V))
+    dst = np.zeros(n_apps, dtype=np.int64)
+    for a in range(n_apps):
+        dst[a] = rng.integers(V)
+        srcs = rng.choice(V, size=min(n_sources, V), replace=False)
+        r[a, srcs] = rng.uniform(rate_lo, rate_hi, size=len(srcs))
+
+    return Instance(
+        adj=jnp.asarray(adj),
+        link_param=jnp.asarray(link_param, dtype=jnp.float32),
+        link_kind=link_kind,
+        comp_param=jnp.asarray(comp_param, dtype=jnp.float32),
+        comp_kind=comp_kind,
+        L=jnp.asarray(L, dtype=jnp.float32),
+        w=jnp.asarray(w, dtype=jnp.float32),
+        wnode=jnp.ones(V, dtype=jnp.float32),
+        r=jnp.asarray(r, dtype=jnp.float32),
+        dst=jnp.asarray(dst),
+        n_tasks=jnp.full((n_apps,), n_tasks),
+        stage_mask=jnp.ones((n_apps, K1), dtype=bool),
+    )
+
+
+# Table II scenario parameters: (topology, |A|, R, link_kind, d_mean,
+#                                comp_kind, s_mean)
+TABLE_II = {
+    "connected-er": ("connected-er", 5, 3, QUEUE, 10.0, QUEUE, 12.0),
+    "balanced-tree": ("balanced-tree", 5, 3, QUEUE, 20.0, QUEUE, 15.0),
+    "fog": ("fog", 5, 3, QUEUE, 20.0, QUEUE, 17.0),
+    "abilene": ("abilene", 3, 3, QUEUE, 15.0, QUEUE, 10.0),
+    "lhc": ("lhc", 8, 3, QUEUE, 15.0, QUEUE, 15.0),
+    "geant": ("geant", 10, 5, QUEUE, 20.0, QUEUE, 20.0),
+    "sw-queue": ("sw", 30, 8, QUEUE, 20.0, QUEUE, 20.0),
+    "sw-linear": ("sw", 30, 8, LINEAR, 20.0, LINEAR, 20.0),
+}
+
+
+def table_ii_instance(name: str, seed: int = 0, rate_scale: float = 1.0) -> Instance:
+    """Instantiate one of the paper's Table II simulation scenarios."""
+    topo, n_apps, R, lk, dmean, ck, smean = TABLE_II[name]
+    adj = TOPOLOGIES[topo]()
+    inst = build_instance(
+        adj,
+        n_apps=n_apps,
+        n_tasks=2,
+        n_sources=R,
+        link_kind=lk,
+        comp_kind=ck,
+        link_mean=dmean,
+        comp_mean=smean,
+        rate_lo=0.5 * rate_scale,
+        rate_hi=1.5 * rate_scale,
+        seed=seed,
+    )
+    return inst

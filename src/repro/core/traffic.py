@@ -1,0 +1,135 @@
+"""Stage traffic, link flows and computation workloads (Section II).
+
+Given a forwarding/offloading strategy ``phi`` the stage traffics
+``t_i(a,k)`` satisfy the linear fixed points
+
+    t(a,0) = Phi_0^T t(a,0) + r(a)
+    t(a,k) = Phi_k^T t(a,k) + g(a,k-1),       g(a,k) = t(a,k) * phi_c(a,k)
+
+(one next-stage packet per computed packet).  For loop-free strategies
+``I - Phi^T`` is nonsingular (spectral radius < 1), so each stage is a dense
+linear solve; the chain coupling is a ``lax.scan`` over k, and applications
+are vmapped.  This is the synchronous, vectorized equivalent of the paper's
+per-packet flow propagation.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.network import Instance
+
+
+class Phi(NamedTuple):
+    """Forwarding/offloading strategy (the optimization variable).
+
+    e: (A, K1, V, V)  phi_{ij}(a,k) link-forwarding fractions
+    c: (A, K1, V)     phi_{i0}(a,k) local-CPU offloading fractions
+    """
+
+    e: jnp.ndarray
+    c: jnp.ndarray
+
+
+class Flows(NamedTuple):
+    t: jnp.ndarray   # (A, K1, V)    stage traffic t_i(a,k)
+    g: jnp.ndarray   # (A, K1, V)    CPU rates g_i(a,k)
+    f: jnp.ndarray   # (A, K1, V, V) link rates f_ij(a,k)
+    F: jnp.ndarray   # (V, V)        total link bit-rates
+    G: jnp.ndarray   # (V,)          total computation workloads
+
+
+def _solve_stage(phi_e_k: jnp.ndarray, inject: jnp.ndarray) -> jnp.ndarray:
+    """Solve t = Phi_k^T t + inject for one (application, stage)."""
+    V = phi_e_k.shape[0]
+    mat = jnp.eye(V, dtype=phi_e_k.dtype) - phi_e_k.T
+    return jnp.linalg.solve(mat, inject)
+
+
+def stage_traffic(inst: Instance, phi: Phi) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute t (A,K1,V) and g (A,K1,V) by scanning the chain."""
+
+    def per_app(phi_e_a, phi_c_a, r_a):
+        def step(inject, xs):
+            # NOTE: no clamping here — the map phi -> t must stay exactly
+            # linear so closed-form marginals (3)-(4) match autodiff and
+            # finite differences (tests/test_marginals.py).  Divergent
+            # solutions from loopy candidate strategies are rejected by
+            # ``traffic_is_valid`` instead.
+            phi_e_k, phi_c_k = xs
+            t_k = _solve_stage(phi_e_k, inject)
+            g_k = t_k * phi_c_k
+            return g_k, (t_k, g_k)
+
+        _, (t_a, g_a) = jax.lax.scan(step, r_a, (phi_e_a, phi_c_a))
+        return t_a, g_a
+
+    return jax.vmap(per_app)(phi.e, phi.c, inst.r)
+
+
+def flows(inst: Instance, phi: Phi) -> Flows:
+    """All flow quantities induced by strategy phi (Table I)."""
+    t, g = stage_traffic(inst, phi)
+    f = t[..., None] * phi.e                                  # (A,K1,V,V)
+    F = jnp.einsum("ak,akij->ij", inst.L, f)
+    G = jnp.einsum("ak,aki->i", inst.w, g) * inst.wnode
+    return Flows(t=t, g=g, f=f, F=F, G=G)
+
+
+def traffic_is_valid(inst: Instance, t: jnp.ndarray) -> jnp.ndarray:
+    """Scalar bool: t is a physical (loop-free) traffic solution.
+
+    For a loop-free strategy, flow conservation bounds every stage traffic
+    by the application's total injected rate; a routing loop makes the
+    Neumann series diverge and the linear solve returns values far outside
+    that bound (or non-finite).
+    """
+    bound = 4.0 * jnp.max(jnp.sum(inst.r, axis=1)) + 1.0
+    finite = jnp.all(jnp.isfinite(t))
+    return finite & jnp.all(t > -1e-3) & jnp.all(t < bound)
+
+
+def total_cost(inst: Instance, phi: Phi) -> jnp.ndarray:
+    """Objective of problem (2): D(phi) = sum D_ij(F_ij) + sum C_i(G_i)."""
+    fl = flows(inst, phi)
+    D_links = jnp.where(inst.adj, costs.cost(inst.link_kind, fl.F, inst.link_param), 0.0)
+    C_nodes = costs.cost(inst.comp_kind, fl.G, inst.comp_param)
+    return jnp.sum(D_links) + jnp.sum(C_nodes)
+
+
+def link_marginals(inst: Instance, F: jnp.ndarray) -> jnp.ndarray:
+    """D'_ij(F_ij), zero on non-links."""
+    m = costs.marginal(inst.link_kind, F, inst.link_param)
+    return jnp.where(inst.adj, m, 0.0)
+
+
+def comp_marginals(inst: Instance, G: jnp.ndarray) -> jnp.ndarray:
+    """C'_i(G_i)."""
+    return costs.marginal(inst.comp_kind, G, inst.comp_param)
+
+
+def renormalize(inst: Instance, phi: Phi) -> Phi:
+    """Project phi back onto the simplex constraints (1), fixing drift.
+
+    Non-negative clip then rescale each (a,k,i) row to sum 1, except
+    degenerate rows (stage K_a at the destination / invalid stages) which
+    are forced to zero; CPU fractions at the final stage are forced to zero.
+    """
+    e = jnp.where(inst.adj[None, None], jnp.maximum(phi.e, 0.0), 0.0)
+    c = jnp.maximum(phi.c, 0.0) * inst.cpu_allowed()[:, :, None]
+    tot = e.sum(-1) + c                                       # (A,K1,V)
+    degen = inst.degenerate_mask()
+    scale = jnp.where(degen | (tot <= 0), 0.0, 1.0 / jnp.maximum(tot, 1e-30))
+    return Phi(e=e * scale[..., None], c=c * scale)
+
+
+def feasibility_violation(inst: Instance, phi: Phi) -> jnp.ndarray:
+    """Max violation of constraint (1) — for tests and invariant checks."""
+    tot = phi.e.sum(-1) + phi.c
+    degen = inst.degenerate_mask()
+    want = jnp.where(degen, 0.0, 1.0)
+    return jnp.max(jnp.abs(tot - want))

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticTokens, batch_for, eval_inputs  # noqa: F401

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel for the paper's hot loop: batched stage propagation.
+
+One Neumann-series step of the traffic / marginal fixed points, batched over
+all (application, stage) pairs:
+
+    out[s, :] = t[s, :] @ M[s, :, :] + src[s, :]
+
+  * traffic sweep:   M = Phi (forward along links),  src = injections
+  * marginal sweep:  M = Phi^T                        src = local marginals
+
+Loop-free routing makes the series exact after <= |V| sweeps, so the online
+GP iteration is a chain of these kernels.  TPU adaptation: stages are the
+major grid axis (one stage's (V, V) routing matrix per VMEM residency),
+node blocks are 128-aligned for the MXU matvec; the wrapper zero-pads V to
+a lane multiple.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _kernel(t_ref, m_ref, src_ref, out_ref):
+    t = t_ref[0].astype(jnp.float32)                 # (1, Vp) row vector
+    m = m_ref[0].astype(jnp.float32)                 # (Vp, Vp)
+    src = src_ref[0].astype(jnp.float32)             # (1, Vp)
+    out = jax.lax.dot(t, m) + src                    # MXU (1,Vp)x(Vp,Vp)
+    out_ref[0, ...] = out.astype(out_ref.dtype)
+
+
+def propagate_step(t, M, src, *, interpret=False):
+    """t, src: (S, V); M: (S, V, V) -> (S, V). One sweep for all stages."""
+    S, V = t.shape
+    Vp = -(-V // LANE) * LANE
+    pad = Vp - V
+    if pad:
+        t = jnp.pad(t, ((0, 0), (0, pad)))
+        src = jnp.pad(src, ((0, 0), (0, pad)))
+        M = jnp.pad(M, ((0, 0), (0, pad), (0, pad)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, 1, Vp), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, Vp, Vp), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, 1, Vp), lambda s: (s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Vp), lambda s: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, 1, Vp), jnp.float32),
+        interpret=interpret,
+    )(t[:, None, :], M, src[:, None, :])
+    return out[:, 0, :V]
+
+
+def solve_fixed_point(M, src, *, sweeps: int, interpret=False):
+    """Iterate out <- out @ M + src from zero; exact for nilpotent M (loop-
+    free routing) once sweeps >= longest path length."""
+    t = jnp.zeros_like(src)
+    step = functools.partial(propagate_step, interpret=interpret)
+    for _ in range(sweeps):
+        t = step(t, M, src)
+    return t

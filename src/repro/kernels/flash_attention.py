@@ -1,0 +1,104 @@
+"""Pallas TPU flash attention (blockwise online-softmax), causal + SWA.
+
+TPU adaptation notes (vs. the CUDA flash-attention algorithm):
+  * tiling targets VMEM: one (BQ, hd) query tile and one (BK, hd) KV tile
+    resident per grid step; BQ/BK default 128 = MXU-aligned.
+  * the KV loop is the *minor grid axis* — TPU grids execute sequentially,
+    so the running max / denominator / accumulator live in VMEM scratch and
+    persist across KV steps for a fixed (batch, head, q-block), replacing
+    the CUDA shared-memory reduction.
+  * GQA is expressed in the BlockSpec index map (kv head = h // rep), so
+    no materialized repeat of K/V ever reaches VMEM.
+
+Layouts: q (B, H, S, hd), k/v (B, KV, S, hd) — the ``ops`` wrapper handles
+(B, S, H, hd) transposition and padding to multiples of the block size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window, bq: int, bk: int, nk: int,
+            seq_len: int):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block (minor: sequential on TPU)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (bq, bk)
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_len                                # padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # (bq,)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)                           # kill -inf rows
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(p, v)
+    m_scr[...] = m_cur
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0, ...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None,
+                        bq=DEFAULT_BQ, bk=DEFAULT_BK, interpret=False):
+    """q: (B,H,S,hd), k/v: (B,KV,S,hd) -> (B,H,S,hd).  S padded by caller."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    bq, bk = min(bq, S), min(bk, S)
+    nq, nk = S // bq, S // bk
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, seq_len=S,
+    )
+    grid = (B, H, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),        # running max
+            pltpu.VMEM((bq,), jnp.float32),        # denominator
+            pltpu.VMEM((bq, hd), jnp.float32),     # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

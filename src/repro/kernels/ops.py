@@ -1,0 +1,59 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True; on a real
+TPU the same call sites compile to Mosaic.  ``INTERPRET`` flips automatically
+from the backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import chain_propagate as _cp
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_chunk as _sc
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal=True, window=None):
+    """(B,S,H,hd) layout public API (matches models.attention.sdpa)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    qt, S = _pad_to(qt, 2, _fa.DEFAULT_BQ)
+    kt, _ = _pad_to(kt, 2, _fa.DEFAULT_BK)
+    vt, _ = _pad_to(vt, 2, _fa.DEFAULT_BK)
+    out = _fa.flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                                  interpret=INTERPRET)
+    return out[:, :, :S].transpose(0, 2, 1, 3)
+
+
+@jax.jit
+def propagate_step(t, M, src):
+    return _cp.propagate_step(t, M, src, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def solve_fixed_point(M, src, *, sweeps: int):
+    return _cp.solve_fixed_point(M, src, sweeps=sweeps, interpret=INTERPRET)
+
+
+@jax.jit
+def ssd_chunk(xh, dt, dtA, cum, BH, CH):
+    """Adapter matching models.ssm.ssd_chunked's kernel call signature."""
+    return _sc.ssd_chunk_fwd(xh, dt, cum, BH, CH, interpret=INTERPRET)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q, k, v, *, causal=True, window=None):
+    """q: (B,H,S,hd), k/v: (B,KV,S,hd) -> (B,H,S,hd)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = hd ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def propagate_step(t, M, src):
+    """out[s] = t[s] @ M[s] + src[s]."""
+    return jnp.einsum("sv,svw->sw", t.astype(jnp.float32),
+                      M.astype(jnp.float32)) + src.astype(jnp.float32)
+
+
+def solve_fixed_point(M, src, *, sweeps: int):
+    t = jnp.zeros_like(src, dtype=jnp.float32)
+    for _ in range(sweeps):
+        t = propagate_step(t, M, src)
+    return t
+
+
+def ssd_chunk(xh, dt, cum, BH, CH):
+    """Intra-chunk SSD core; shapes as kernels.ssd_chunk.ssd_chunk_fwd."""
+    f32 = jnp.float32
+    xh, dt, cum, BH, CH = (a.astype(f32) for a in (xh, dt, cum, BH, CH))
+    Q = xh.shape[2]
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", CH, BH)
+    decay = jnp.exp(cum.transpose(0, 1, 3, 2)[:, :, :, :, None]
+                    - cum.transpose(0, 1, 3, 2)[:, :, :, None, :])
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    w = jnp.where(tri[None, None, None], scores * decay, 0.0)
+    w = w * dt.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y = jnp.einsum("bchqk,bckhp->bcqhp", w, xh)
+    total = cum[:, :, -1, :]
+    sdec = jnp.exp(total[:, :, None, :] - cum) * dt
+    state = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", sdec, BH, xh)
+    return y, state

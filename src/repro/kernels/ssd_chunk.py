@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk core.
+
+Computes, for one (batch, chunk, head) grid cell with Q tokens resident in
+VMEM:
+
+    scores[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j        (j <= i)
+    y_intra     = scores @ X                                      (Q, P)
+    state_c     = sum_j exp(total - cum_j) * dt_j * B_j (x) X_j   (N, P)
+
+This is the matmul-rich part of SSD that maps onto the MXU ((Q,N)x(N,Q) and
+(Q,Q)x(Q,P) products); the cross-chunk recurrence stays a lax.scan in
+``repro.models.ssm``.  Q defaults to 128 (lane-aligned); P, N are padded by
+the wrapper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, st_ref):
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)      # (Q, 1) -> squeeze below
+    cum = cum_ref[0, 0, :, 0].astype(jnp.float32)    # (Q, 1)
+    B = b_ref[0, 0, :, 0].astype(jnp.float32)        # (Q, N)
+    C = c_ref[0, 0, :, 0].astype(jnp.float32)        # (Q, N)
+    Q = x.shape[0]
+
+    dt1 = dt[:, 0]
+    cum1 = cum[:, 0]
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))     # (Q, Q)
+    decay = jnp.exp(cum1[:, None] - cum1[None, :])
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    w = jnp.where(jj <= ii, scores * decay * dt1[None, :], 0.0)
+    y_ref[0, 0, :, 0] = jax.lax.dot(w, x).astype(y_ref.dtype)        # (Q, P)
+
+    total = cum1[-1]
+    sdec = jnp.exp(total - cum1) * dt1                               # (Q,)
+    st = jax.lax.dot_general(B * sdec[:, None], x, (((0,), (0,)), ((), ())))
+    st_ref[0, 0, 0] = st.astype(st_ref.dtype)                        # (N, P)
+
+
+def ssd_chunk_fwd(xh, dt, cum, BH, CH, *, interpret=False):
+    """xh: (B,nc,Q,H,P), dt/cum: (B,nc,Q,H), BH/CH: (B,nc,Q,H,N).
+
+    Returns (y_intra (B,nc,Q,H,P), state_c (B,nc,H,P,N)) — same contract as
+    the jnp path in ``repro.models.ssm.ssd_chunked``.
+    """
+    Bsz, nc, Q, H, P = xh.shape
+    N = BH.shape[-1]
+    dt4 = dt[..., None]                               # (B,nc,Q,H,1)
+    cum4 = cum[..., None]
+
+    grid = (Bsz * nc, H)
+    xr = xh.reshape(Bsz * nc, Q, H, P)
+    dtr = dt4.reshape(Bsz * nc, Q, H, 1)
+    cumr = cum4.reshape(Bsz * nc, Q, H, 1)
+    br = BH.reshape(Bsz * nc, Q, H, N)
+    cr = CH.reshape(Bsz * nc, Q, H, N)
+
+    y, st = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda g, h: (g, 0, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1, 1), lambda g, h: (g, 0, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1, 1), lambda g, h: (g, 0, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1, N), lambda g, h: (g, 0, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1, N), lambda g, h: (g, 0, 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda g, h: (g, 0, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda g, h: (g, 0, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz * nc, 1, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz * nc, 1, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr[:, None], dtr[:, None], cumr[:, None], br[:, None], cr[:, None])
+
+    y = y[:, 0].reshape(Bsz, nc, Q, H, P)
+    st = st[:, 0].reshape(Bsz, nc, H, N, P).transpose(0, 1, 2, 4, 3)  # -> (...,P,N)
+    return y, st

@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Tests may shrink the fake-device count via
+# REPRO_DRYRUN_DEVICES — still before jax import.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import gc                # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs                                   # noqa: E402
+from repro.launch import shardings as shr                   # noqa: E402
+from repro.launch.mesh import (                             # noqa: E402
+    make_mini_mesh, make_pod_mesh, make_production_mesh,
+)
+from repro.launch.specs import INPUT_SHAPES, input_specs    # noqa: E402
+from repro.models.transformer import Model                  # noqa: E402
+from repro.serve.engine import make_prefill_step, make_serve_step  # noqa: E402
+from repro.train import trainer                             # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination with ShapeDtypeStruct inputs (no allocation), and record
+memory_analysis / cost_analysis / per-collective byte counts for the
+roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+"""
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_TYPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by every collective op, by op kind.
+
+    XLA's HLO text does not always annotate operand types inline, so we
+    parse the RESULT type(s) on the LHS of each collective instruction:
+      * all-reduce / all-to-all / collective-permute: operand size ==
+        result size.
+      * all-gather: the result is the gathered (full) tensor — an upper
+        bound on per-device wire bytes (ring moves (n-1)/n of it).
+      * reduce-scatter: the result is 1/n of the reduced operand; scale by
+        the replica-group size to recover operand bytes.
+    """
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        eq = line.find("=")
+        if eq < 0 or eq > m.start():
+            continue
+        lhs = line[eq + 1:m.start()]
+        total = 0.0
+        for dt, dims in _TYPE_RE.findall(lhs):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        if kind == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            if g:
+                total *= int(g.group(2))
+        if total:
+            out[kind] = out.get(kind, 0.0) + total
+    return out
+
+
+def plan(arch: str, shape: str):
+    """Returns (cfg, mode, note) or (None, None, skip_reason)."""
+    cfg = configs.get(arch)
+    seq, batch, kind = INPUT_SHAPES[shape]
+    if cfg.encoder_only and kind == "decode":
+        return None, None, "encoder-only: no decode step (DESIGN.md §6)"
+    note = ""
+    if shape == "long_500k":
+        attention_free = cfg.is_attention_free or cfg.arch_type == "hybrid"
+        has_window = cfg.window is not None
+        if not attention_free and not has_window and cfg.attn_kind != "mla":
+            if cfg.serve_window is None:
+                return None, None, "pure full attention at 500k context"
+            cfg = dataclasses.replace(cfg, window=cfg.serve_window)
+            note = f"SWA serving variant W={cfg.serve_window} (DESIGN.md §6)"
+    return cfg, kind, note
+
+
+def _lower_one(cfg, mode, mesh, batch, seq, moment_dtype, unroll=False,
+               opts=()):
+    """opts: iterable of optimization-variant names (§Perf):
+      blockwise — online-softmax attention (no S^2 temps)
+      zero1     — shard optimizer moments over the data axis too
+      f32moms   — float32 moments (cost of exactness, for comparison)
+    """
+    attn_impl = "blockwise" if "blockwise" in opts else "naive"
+    expert_axis = "model" if "moeshard" in opts else None
+    if expert_axis and cfg.moe and cfg.moe.n_experts % mesh.shape["model"]:
+        expert_axis = None            # experts not divisible on this mesh
+    ep_mesh = None
+    if "epmoe" in opts and cfg.moe and cfg.moe.n_experts % mesh.shape["model"] == 0:
+        ep_mesh = mesh
+    mk = dict(dtype=jnp.bfloat16, unroll=unroll, attn_impl=attn_impl,
+              expert_axis=expert_axis,
+              remat_policy="mixer" if "rematmixer" in opts else None,
+              ep_mesh=ep_mesh)
+    if "f32moms" in opts:
+        moment_dtype = jnp.float32
+    t0 = time.time()
+    with jax.default_device(jax.devices("cpu")[0]):
+        if mode == "train":
+            model = Model(cfg, remat=True, **mk)
+            state_struct = jax.eval_shape(
+                lambda k: trainer.init_state(model, k, moment_dtype=moment_dtype),
+                jax.random.PRNGKey(0))
+            batch_struct = input_specs(cfg, batch, seq, mode="train")
+            pspecs = shr.param_specs(mesh, state_struct.params)
+            mspecs = pspecs
+            if "zero1" in opts:
+                mspecs = shr.zero1_specs(mesh, pspecs, state_struct.params)
+            state_specs = trainer.TrainState(
+                params=pspecs,
+                opt=type(state_struct.opt)(
+                    step=jax.sharding.PartitionSpec(),
+                    mu=mspecs, nu=mspecs),
+            )
+            bspecs = shr.batch_specs(mesh, batch_struct, batch)
+            step = trainer.make_train_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(shr.shardings_of(mesh, state_specs),
+                              shr.shardings_of(mesh, bspecs)),
+            )
+            with mesh:
+                lowered = jitted.lower(state_struct, batch_struct)
+        elif mode == "prefill":
+            model = Model(cfg, **mk)
+            params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(batch, seq, dtype=jnp.bfloat16))
+            batch_struct = input_specs(cfg, batch, seq, mode="prefill")
+            pspecs = shr.param_specs(mesh, params_struct)
+            cspecs = shr.cache_specs(mesh, cache_struct, batch)
+            bspecs = shr.batch_specs(mesh, batch_struct, batch)
+            step = make_prefill_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(shr.shardings_of(mesh, pspecs),
+                              shr.shardings_of(mesh, cspecs),
+                              shr.shardings_of(mesh, bspecs)),
+            )
+            with mesh:
+                lowered = jitted.lower(params_struct, cache_struct, batch_struct)
+        else:  # decode
+            model = Model(cfg, **mk)
+            params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(batch, seq, dtype=jnp.bfloat16))
+            batch_struct = input_specs(cfg, batch, seq, mode="decode")
+            pspecs = shr.param_specs(mesh, params_struct)
+            cspecs = shr.cache_specs(mesh, cache_struct, batch)
+            bspecs = shr.batch_specs(mesh, batch_struct, batch)
+            step = make_serve_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(shr.shardings_of(mesh, pspecs),
+                              shr.shardings_of(mesh, cspecs),
+                              shr.shardings_of(mesh, bspecs)["tokens"],
+                              None),
+                # §Perf 'donate': alias the KV cache in/out so the decode
+                # step updates it in place instead of copying ~the whole
+                # cache every token (the dominant decode memory traffic)
+                donate_argnums=(1,) if "donate" in opts else (),
+            )
+            with mesh:
+                lowered = jitted.lower(params_struct, cache_struct,
+                                       batch_struct["tokens"],
+                                       jnp.int32(seq - 1))
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+                 if k in cost},
+        "collective_bytes": coll,
+    }
+
+
+def _probe_cfg(cfg, n_periods: int):
+    """Same architecture family with the scanned body cut to n_periods."""
+    from repro.models.transformer import build_stack
+
+    stack = build_stack(cfg)
+    period = len(stack.pattern)
+    n_prefix = len(stack.prefix)
+    return dataclasses.replace(cfg, n_layers=n_prefix + n_periods * period), stack
+
+
+def lower_combo(arch: str, shape: str, mesh, *, moment_dtype=jnp.bfloat16,
+                probe: bool = True, opts=()):
+    """Lower+compile the full config; optionally also compile 1- and
+    2-period probes to undo XLA's scan-body cost amortization (cost_analysis
+    counts a scan body once regardless of trip count), extrapolating
+      total = c1 + (n_periods - 1) * (c2 - c1)
+    which is exact because period bodies are identical."""
+    cfg, mode, note = plan(arch, shape)
+    if cfg is None:
+        return {"arch": arch, "shape": shape, "skipped": note}
+    seq, batch, _ = INPUT_SHAPES[shape]
+
+    rec = {
+        "arch": arch, "shape": shape, "mode": mode, "note": note,
+        "opts": list(opts),
+        "mesh": dict(mesh.shape),
+        "devices": int(jnp.prod(jnp.asarray(list(mesh.shape.values())))),
+        "seq_len": seq, "global_batch": batch,
+    }
+    rec.update(_lower_one(cfg, mode, mesh, batch, seq, moment_dtype, opts=opts))
+
+    if probe:
+        cfg1, stack = _probe_cfg(cfg, 1)
+        cfg2, _ = _probe_cfg(cfg, 2)
+        r1 = _lower_one(cfg1, mode, mesh, batch, seq, moment_dtype, unroll=True, opts=opts)
+        r2 = _lower_one(cfg2, mode, mesh, batch, seq, moment_dtype, unroll=True, opts=opts)
+        n = stack.n_periods
+        extra = {}
+        for key in set(r1["cost"]) | set(r2["cost"]):
+            c1, c2 = r1["cost"].get(key, 0) or 0, r2["cost"].get(key, 0) or 0
+            extra[key] = c1 + (n - 1) * (c2 - c1)
+        coll = {}
+        for key in set(r1["collective_bytes"]) | set(r2["collective_bytes"]):
+            c1 = r1["collective_bytes"].get(key, 0.0)
+            c2 = r2["collective_bytes"].get(key, 0.0)
+            coll[key] = c1 + (n - 1) * (c2 - c1)
+        rec["cost_extrapolated"] = extra
+        rec["collective_bytes_extrapolated"] = coll
+        rec["probe"] = {"n_periods": n, "c1": r1["cost"], "c2": r2["cost"],
+                        "coll1": r1["collective_bytes"],
+                        "coll2": r2["collective_bytes"]}
+    return rec
+
+
+def run(args) -> int:
+    os.makedirs(args.out, exist_ok=True)
+    archs = configs.ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = args.mesh.split(",")
+    failures = 0
+    for mesh_name in meshes:
+        if mesh_name == "pod":
+            mesh = make_production_mesh(multi_pod=False)
+        elif mesh_name == "multipod":
+            mesh = make_production_mesh(multi_pod=True)
+        elif mesh_name == "mini":
+            mesh = make_mini_mesh()
+        elif "x" in mesh_name:                      # e.g. pod32x8
+            d, m = mesh_name.replace("pod", "").split("x")
+            mesh = make_pod_mesh(int(d), int(m))
+        else:
+            raise SystemExit(f"unknown mesh {mesh_name}")
+        opts = tuple(o for o in args.opt.split(",") if o)
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}__{shape}__{mesh_name}"
+                if opts:
+                    tag += "__opt-" + "-".join(opts)
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = lower_combo(arch, shape, mesh,
+                                      probe=not args.no_probe, opts=opts)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                    print(f"  ERROR {rec['error']}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if "error" not in rec and "skipped" not in rec:
+                    mem = rec["memory"]
+                    arg_gb = (mem["argument_bytes"] or 0) / 1e9
+                    tmp_gb = (mem["temp_bytes"] or 0) / 1e9
+                    print(f"  ok lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                          f"args {arg_gb:.1f}GB temps {tmp_gb:.1f}GB "
+                          f"flops {rec['cost'].get('flops', 0):.3g} "
+                          f"coll {sum(rec['collective_bytes'].values()):.3g}B",
+                          flush=True)
+                elif "skipped" in rec:
+                    print(f"  skipped: {rec['skipped']}", flush=True)
+                gc.collect()
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="pod",
+                    help="comma list of pod|multipod|mini")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the cost-extrapolation probes (multipod pass "
+                         "only needs the compile proof)")
+    ap.add_argument("--opt", default="",
+                    help="comma list of §Perf variants: blockwise,zero1,"
+                         "f32moms,moeshard,rematmixer,donate")
+    args = ap.parse_args()
+    failures = run(args)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

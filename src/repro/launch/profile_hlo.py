@@ -1,0 +1,89 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"])
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse      # noqa: E402
+import re            # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.launch import dryrun as dr   # noqa: E402
+from repro.launch.specs import INPUT_SHAPES  # noqa: E402
+
+"""HLO 'profiler' for the dry-run (no real hardware): compile a 1-period
+unrolled probe of an (arch, shape) pair and rank ops by FLOPs estimated
+from their output shapes — the structural profile the §Perf loop reasons
+from (which dots dominate, what got replicated, what remat re-runs)."""
+
+_DOT_RE = re.compile(
+    r"%(fusion[\w.\-]*|dot[\w.\-]*|convolution[\w.\-]*) = (\w+)\[([0-9,]*)\]")
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--opt", default="")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    from repro.launch.mesh import make_pod_mesh, make_production_mesh
+    if args.mesh == "pod":
+        mesh = make_production_mesh()
+    else:
+        d, m = args.mesh.replace("pod", "").split("x")
+        mesh = make_pod_mesh(int(d), int(m))
+
+    cfg, mode, note = dr.plan(args.arch, args.shape)
+    cfg1, _ = dr._probe_cfg(cfg, 1)
+    seq, batch, _ = INPUT_SHAPES[args.shape]
+    opts = tuple(o for o in args.opt.split(",") if o)
+
+    # reuse the dryrun lowering path but keep the compiled text
+    import repro.launch.dryrun as d2
+    orig = d2.collective_bytes
+    captured = {}
+
+    def capture(txt):
+        captured["hlo"] = txt
+        return orig(txt)
+
+    d2.collective_bytes = capture
+    rec = d2._lower_one(cfg1, mode, mesh, batch, seq,
+                        moment_dtype=jax.numpy.bfloat16, unroll=True,
+                        opts=opts)
+    txt = captured["hlo"]
+
+    sizes = defaultdict(float)
+    for line in txt.splitlines():
+        m = _DOT_RE.search(line)
+        if not m:
+            continue
+        _, dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        meta = _META_RE.search(line)
+        name = meta.group(1) if meta else m.group(1)
+        # compress op_name to its trailing semantic part
+        name = "/".join(name.split("/")[-3:])[:110]
+        sizes[name] += n
+
+    print(f"# {args.arch} {args.shape} mesh={args.mesh} opts={opts} "
+          f"(1-period probe; output-element counts of dot/fusion ops)")
+    print(f"# total flops (cost_analysis): {rec['cost']['flops']:.3e}  "
+          f"bytes: {rec['cost'].get('bytes accessed', 0):.3e}")
+    for name, n in sorted(sizes.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"{n:16.4g}  {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs`` is the single source of truth for what a train / prefill /
+decode step consumes, per architecture and assignment shape.  The audio and
+vision frontends are stubbed exactly here: their specs are precomputed
+frame/patch embeddings of the right shape (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# The four assignment input shapes: name -> (seq_len, global_batch, kind)
+INPUT_SHAPES = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, batch: int, seq_len: int, *,
+                mode: str = "train") -> dict:
+    """Input structs for one step.
+
+    train:   full batch with targets (and mask for audio)
+    prefill: prompt batch, no targets
+    decode:  ONE new token per request (seq_len describes the cache, not
+             the input — see launch/dryrun.py which sizes the cache)
+    """
+    if mode == "decode":
+        assert not cfg.encoder_only, "encoder-only archs have no decode step"
+        return {"tokens": _sds((batch, 1), I32)}
+
+    if cfg.frontend == "audio":
+        specs = {
+            "embeds": _sds((batch, seq_len, cfg.d_model), BF16),
+            "mask": _sds((batch, seq_len), jnp.bool_),
+        }
+        if mode == "train":
+            specs["targets"] = _sds((batch, seq_len), I32)
+        return specs
+
+    if cfg.frontend == "vision":
+        n_patch = min(cfg.n_patches, max(seq_len - 16, 0))
+        n_text = seq_len - n_patch
+        specs = {
+            "patches": _sds((batch, n_patch, cfg.d_model), BF16),
+            "tokens": _sds((batch, n_text), I32),
+        }
+        if mode == "train":
+            specs["targets"] = _sds((batch, n_text), I32)
+        return specs
+
+    specs = {"tokens": _sds((batch, seq_len), I32)}
+    if mode == "train":
+        specs["targets"] = _sds((batch, seq_len), I32)
+    return specs

@@ -1,0 +1,2 @@
+from repro.models.transformer import Model, make_model  # noqa: F401
+from repro.models import flops  # noqa: F401

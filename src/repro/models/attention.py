@@ -1,0 +1,187 @@
+"""Attention: GQA with causal / sliding-window / local-global / bidirectional
+masks, soft-capping, RoPE, prefill and single-token decode paths.
+
+The jnp path below is the reference used for dry-runs (XLA fuses it well on
+TPU); ``repro.kernels.flash_attention`` provides the Pallas TPU kernel with
+the same semantics (``use_kernel=True``), validated against this code in
+tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray    # (d, H, hd)
+    wk: jnp.ndarray    # (d, KV, hd)
+    wv: jnp.ndarray    # (d, KV, hd)
+    wo: jnp.ndarray    # (H, hd, d)
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> AttnParams:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return AttnParams(
+        wq=layers.dense_init(k1, (d, H, hd), dtype=dtype),
+        wk=layers.dense_init(k2, (d, KV, hd), dtype=dtype),
+        wv=layers.dense_init(k3, (d, KV, hd), dtype=dtype),
+        wo=layers.dense_init(k4, (H, hd, d), in_axis=1, dtype=dtype),
+    )
+
+
+def _mask(sq: int, skv: int, q_pos: jnp.ndarray, kv_pos: jnp.ndarray,
+          causal: bool, window: Optional[int], kv_len: Optional[jnp.ndarray]):
+    """(..., sq, skv) bool mask. True = attend."""
+    m = jnp.ones((sq, skv), dtype=bool)
+    dq = q_pos[..., :, None]
+    dk = kv_pos[..., None, :]
+    if causal:
+        m = m & (dk <= dq)
+    if window is not None:
+        m = m & (dk > dq - window)
+    if kv_len is not None:                      # decode: valid cache prefix
+        m = m & (dk < kv_len[..., None, None])
+    return m
+
+
+def sdpa_blockwise(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
+                   softcap_val=None, kv_len=None, block=512):
+    """Online-softmax attention in pure XLA: lax.scan over KV blocks.
+
+    Never materializes the (Sq, Skv) score matrix — HBM temp traffic drops
+    from O(S^2) to O(S * block).  This is the §Perf 'memory-term' variant
+    (the Pallas kernel is the TPU-native version of the same schedule; this
+    path is what the 512-device dry-run lowers through GSPMD).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    nb = -(-Skv // block)
+    pad = nb * block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, [(0, 0)] * (kv_pos.ndim - 1) + [(0, pad)],
+                         constant_values=jnp.iinfo(jnp.int32).max // 2)
+    scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, rep, hd)
+    kb = k.reshape(B, nb, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    pb = jnp.broadcast_to(kv_pos if kv_pos.ndim == 2 else kv_pos[None],
+                          (B, nb * block)).reshape(B, nb, block).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_c, v_c, p_c = xs                                  # (B,blk,KV,hd), (B,blk)
+        s = jnp.einsum("bqgrh,bkgh->bgrqk", qf, k_c.astype(jnp.float32))
+        if softcap_val is not None:
+            s = softcap_val * jnp.tanh(s / softcap_val)
+        dq = q_pos[:, None, None, :, None]
+        dk = p_c[:, None, None, None, :]
+        mask = jnp.ones(s.shape, bool)
+        if causal:
+            mask &= dk <= dq
+        if window is not None:
+            mask &= dk > dq - window
+        if kv_len is not None:
+            mask &= dk < kv_len[:, None, None, None, None]
+        mask &= dk < jnp.iinfo(jnp.int32).max // 4          # padding
+        s = jnp.where(mask, s, -1e30)
+        m_cur = jnp.maximum(m_prev, s.max(-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_cur[..., None]), 0.0)
+        l_cur = l_prev * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bgrqk,bkgh->bgrqh", p, v_c.astype(jnp.float32))
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((B, KV, rep, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, rep, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KV, rep, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def sdpa(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
+         softcap_val=None, kv_len=None, use_kernel=False):
+    """q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd) -> (B,Sq,H,hd).
+
+    GQA: H must be a multiple of KV; kv heads are broadcast.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+
+    if use_kernel and Sq > 1 and softcap_val is None and kv_len is None:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+
+    qh = q.reshape(B, Sq, KV, rep, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqgrh,bkgh->bgrqk", qh.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    logits = layers.softcap(logits, softcap_val)
+    mask = _mask(Sq, k.shape[1], q_pos, kv_pos, causal, window, kv_len)
+    # mask is (sq,skv) or (B,sq,skv); align to logits (B,g,r,q,k)
+    if mask.ndim == 2:
+        mask = mask[None, None, None]
+    else:
+        mask = mask[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def apply(params: AttnParams, cfg: ModelConfig, x: jnp.ndarray, *,
+          positions: jnp.ndarray, window: Optional[int],
+          cache: Optional[tuple] = None, cache_index: Optional[jnp.ndarray] = None,
+          use_kernel: bool = False, impl: str = "naive"):
+    """Full attention block body (no residual/norm — the caller owns those).
+
+    cache: (k_cache, v_cache) with shape (B, S_max, KV, hd); when given, new
+    k/v are written at ``cache_index`` and attention runs against the cache
+    (decode / incremental prefill).  Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params.wq)
+    k = jnp.einsum("bsd,dgk->bsgk", x, params.wk)
+    v = jnp.einsum("bsd,dgk->bsgk", x, params.wv)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    causal = not cfg.encoder_only
+    attn = sdpa_blockwise if impl == "blockwise" else sdpa
+    kw = {} if impl == "blockwise" else {"use_kernel": use_kernel}
+    if cache is None:
+        out = attn(q, k, v, q_pos=positions, kv_pos=positions, causal=causal,
+                   window=window, softcap_val=cfg.attn_softcap, **kw)
+        new_cache = None
+    else:
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cache_index, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cache_index, axis=1)
+        S_max = kc.shape[1]
+        kv_pos = jnp.arange(S_max)[None, :].astype(positions.dtype)
+        kv_len = cache_index + S
+        out = attn(q, kc, vc, q_pos=positions, kv_pos=kv_pos, causal=causal,
+                   window=window, softcap_val=cfg.attn_softcap,
+                   kv_len=jnp.full((B,), kv_len))
+        new_cache = (kc, vc)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params.wo)
+    return out, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    shape = (batch, max_len, KV, hd)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

@@ -1,0 +1,126 @@
+"""Transformer blocks: one residual block = norm -> mixer -> norm -> FFN.
+
+A block's *mixer* is GQA attention, MLA, or a Mamba-2 SSD layer; its FFN is
+dense SwiGLU, MoE, or absent (pure-SSM archs).  ``LayerMeta`` describes a
+layer position's static structure so heterogeneous stacks (Jamba 1:7,
+Gemma-2 local/global, DeepSeek first-k-dense) can be scanned over periods.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, mla, moe, ssm
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMeta:
+    idx: int                 # absolute layer index
+    kind: str                # 'attn' | 'ssm'
+    is_moe: bool
+    window: Optional[int]
+
+
+def layer_meta(cfg: ModelConfig, idx: int) -> LayerMeta:
+    return LayerMeta(
+        idx=idx,
+        kind=cfg.layer_kind(idx),
+        is_moe=cfg.layer_is_moe(idx),
+        window=cfg.layer_window(idx),
+    )
+
+
+class FFNParams(NamedTuple):
+    w_gate: jnp.ndarray
+    w_up: jnp.ndarray
+    w_down: jnp.ndarray
+
+
+def init_block(key, cfg: ModelConfig, meta: LayerMeta, dtype=jnp.float32) -> dict:
+    kmix, kffn = jax.random.split(key)
+    p: dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    if meta.kind == "attn":
+        if cfg.attn_kind == "mla":
+            p["mixer"] = mla.init(kmix, cfg, dtype)
+        else:
+            p["mixer"] = attention.init(kmix, cfg, dtype)
+    else:
+        p["mixer"] = ssm.init(kmix, cfg, dtype)
+    if cfg.post_norm:
+        p["ln1_post"] = jnp.zeros((cfg.d_model,), dtype)
+
+    has_ffn = meta.is_moe or (cfg.d_ff > 0 and not (cfg.arch_type == "ssm"))
+    if has_ffn:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        if meta.is_moe:
+            p["ffn"] = moe.init(kffn, cfg, dtype)
+        else:
+            k1, k2, k3 = jax.random.split(kffn, 3)
+            d, f = cfg.d_model, cfg.d_ff
+            p["ffn"] = FFNParams(
+                w_gate=layers.dense_init(k1, (d, f), dtype=dtype),
+                w_up=layers.dense_init(k2, (d, f), dtype=dtype),
+                w_down=layers.dense_init(k3, (f, d), dtype=dtype),
+            )
+        if cfg.post_norm:
+            p["ln2_post"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, meta: LayerMeta, batch: int,
+                     max_len: int, dtype=jnp.bfloat16):
+    if meta.kind == "ssm":
+        return ssm.init_cache(cfg, batch, dtype)
+    if cfg.attn_kind == "mla":
+        return mla.init_cache(cfg, batch, max_len, dtype)
+    return attention.init_cache(cfg, batch, max_len, dtype)
+
+
+def apply_block(params: dict, cfg: ModelConfig, meta: LayerMeta, x: jnp.ndarray,
+                *, positions: jnp.ndarray, cache=None, cache_index=None,
+                use_kernel: bool = False, attn_impl: str = "naive",
+                expert_axis: str | None = None, ep_mesh=None):
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+
+    h = layers.rms_norm(x, params["ln1"], cfg.norm_eps)
+    if meta.kind == "attn":
+        mod = mla if cfg.attn_kind == "mla" else attention
+        mix, new_cache = mod.apply(
+            params["mixer"], cfg, h, positions=positions, window=meta.window,
+            cache=cache, cache_index=cache_index, use_kernel=use_kernel,
+            impl=attn_impl,
+        )
+    else:
+        mix, new_cache = ssm.apply(
+            params["mixer"], cfg, h, cache=cache, use_kernel=use_kernel,
+        )
+    if cfg.post_norm:
+        mix = layers.rms_norm(mix, params["ln1_post"], cfg.norm_eps)
+    # named for selective remat: policy save_only_these_names("mixer_out")
+    # keeps mixer outputs across the checkpoint so the backward pass does
+    # not re-run attention/SSD forward (inert without the policy)
+    from jax.ad_checkpoint import checkpoint_name
+    mix = checkpoint_name(mix, "mixer_out")
+    x = x + mix
+
+    if "ffn" in params:
+        h = layers.rms_norm(x, params["ln2"], cfg.norm_eps)
+        if meta.is_moe:
+            if ep_mesh is not None:
+                from repro.models import moe_ep
+                f, aux = moe_ep.apply_ep(params["ffn"], cfg, h, ep_mesh)
+            else:
+                f, aux = moe.apply(params["ffn"], cfg, h, expert_axis=expert_axis)
+        else:
+            fp: FFNParams = params["ffn"]
+            f = layers.swiglu(h, fp.w_gate, fp.w_up, fp.w_down, cfg.act)
+        if cfg.post_norm:
+            f = layers.rms_norm(f, params["ln2_post"], cfg.norm_eps)
+        x = x + f
+    return x, new_cache, aux

@@ -1,0 +1,67 @@
+"""Shared neural-net building blocks (pure-JAX, functional params)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    g = act_fn(act)(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd), positions: (..., S) -> rotated x (same dtype)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                            # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32) -> jnp.ndarray:
+    fan_in = max(shape[in_axis], 1)          # zero-width params (n_shared=0)
+    std = fan_in ** -0.5
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.zeros(shape, dtype)

@@ -1,0 +1,123 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Train/prefill path: full low-rank decomposition —
+  q  = RoPE-split( W_UQ . norm(W_DQ x) )                 per-head (nope|rope)
+  kv = W_DKV x  ->  c_kv (rank 512)  +  k_rope (shared 64-dim, RoPE'd)
+  k  = (W_UK c_kv | broadcast k_rope),  v = W_UV c_kv
+
+Decode path (absorbed): the cache stores ONLY (c_kv, k_rope) — 576 floats
+per token instead of H*(128+128); W_UK is absorbed into the query and W_UV
+into the output projection, so decode attention runs in the compressed
+space.  This is MLA's central serving trick and what makes long_500k decode
+feasible for a 128-head model (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+class MLAParams(NamedTuple):
+    w_dq: jnp.ndarray      # (d, q_rank)
+    q_norm: jnp.ndarray    # (q_rank,)
+    w_uq: jnp.ndarray      # (q_rank, H, nope+rope)
+    w_dkv: jnp.ndarray     # (d, kv_rank + rope)
+    kv_norm: jnp.ndarray   # (kv_rank,)
+    w_uk: jnp.ndarray      # (kv_rank, H, nope)
+    w_uv: jnp.ndarray      # (kv_rank, H, v)
+    w_o: jnp.ndarray       # (H, v, d)
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> MLAParams:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return MLAParams(
+        w_dq=layers.dense_init(ks[0], (d, m.q_lora_rank), dtype=dtype),
+        q_norm=jnp.zeros((m.q_lora_rank,), dtype),
+        w_uq=layers.dense_init(ks[1], (m.q_lora_rank, H, m.nope_head_dim + m.rope_head_dim), dtype=dtype),
+        w_dkv=layers.dense_init(ks[2], (d, m.kv_lora_rank + m.rope_head_dim), dtype=dtype),
+        kv_norm=jnp.zeros((m.kv_lora_rank,), dtype),
+        w_uk=layers.dense_init(ks[3], (m.kv_lora_rank, H, m.nope_head_dim), dtype=dtype),
+        w_uv=layers.dense_init(ks[4], (m.kv_lora_rank, H, m.v_head_dim), dtype=dtype),
+        w_o=layers.dense_init(ks[5], (H, m.v_head_dim, d), in_axis=1, dtype=dtype),
+    )
+
+
+def _queries(p: MLAParams, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    cq = layers.rms_norm(x @ p.w_dq, p.q_norm, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p.w_uq)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p: MLAParams, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    dkv = x @ p.w_dkv
+    c_kv = layers.rms_norm(dkv[..., : m.kv_lora_rank], p.kv_norm, cfg.norm_eps)
+    k_rope = dkv[..., m.kv_lora_rank:][:, :, None, :]        # (B,S,1,rope)
+    k_rope = layers.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def apply(p: MLAParams, cfg: ModelConfig, x, *, positions,
+          cache: Optional[tuple] = None, cache_index=None, impl: str = "naive",
+          **_):
+    """Returns (out, new_cache); cache = (c_kv, k_rope) compressed."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+
+    if cache is None:
+        # ---- train / prefill: expand keys and values per head ----
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p.w_uk)
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p.w_uv)
+        lg = jnp.einsum("bqhk,bshk->bhqs", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+        lg += jnp.einsum("bqhk,bsk->bhqs", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+        lg = lg * scale
+        mask = positions[:, None, :, None] >= positions[:, None, None, :] if positions.ndim == 2 \
+            else (jnp.arange(S)[:, None] >= jnp.arange(S)[None, :])[None, None]
+        lg = jnp.where(mask if mask.ndim == 4 else mask[None], lg, -1e30)
+        pr = jax.nn.softmax(lg, axis=-1)
+        out = jnp.einsum("bhqs,bshk->bqhk", pr, v.astype(jnp.float32)).astype(x.dtype)
+        new_cache = None
+    else:
+        # ---- absorbed decode against the compressed cache ----
+        ckv_c, krope_c = cache
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(ckv_c, c_kv.astype(ckv_c.dtype), cache_index, axis=1)
+        krope_c = jax.lax.dynamic_update_slice_in_dim(krope_c, k_rope.astype(krope_c.dtype), cache_index, axis=1)
+        S_max = ckv_c.shape[1]
+        # absorb W_UK into the query: q_eff (B,S,H,kv_rank)
+        q_eff = jnp.einsum("bqhk,rhk->bqhr", q_nope, p.w_uk)
+        lg = jnp.einsum("bqhr,bsr->bhqs", q_eff.astype(jnp.float32), ckv_c.astype(jnp.float32))
+        lg += jnp.einsum("bqhk,bsk->bhqs", q_rope.astype(jnp.float32), krope_c.astype(jnp.float32))
+        lg = lg * scale
+        kv_len = cache_index + S
+        q_abs = positions[..., :, None] if positions.ndim == 2 else jnp.arange(S)[None, :, None]
+        s_pos = jnp.arange(S_max)[None, None, :]
+        valid = (s_pos <= q_abs) & (s_pos < kv_len)
+        lg = jnp.where(valid[:, None], lg, -1e30)
+        pr = jax.nn.softmax(lg, axis=-1)
+        # attend in compressed space, then expand with W_UV
+        ctx = jnp.einsum("bhqs,bsr->bqhr", pr, ckv_c.astype(jnp.float32))
+        out = jnp.einsum("bqhr,rhk->bqhk", ctx, p.w_uv.astype(jnp.float32)).astype(x.dtype)
+        new_cache = (ckv_c, krope_c)
+
+    out = jnp.einsum("bqhk,hkd->bqd", out, p.w_o)
+    return out, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return (jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            jnp.zeros((batch, max_len, m.rope_head_dim), dtype))

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN with capacity-based token dropping.
+
+Dispatch uses scatter/gather over a fixed-capacity per-expert buffer
+(E, C, d) — compile-friendly for the 512-device dry-run (the buffer's
+expert axis carries the "model"-axis sharding) and exact for the smoke
+tests when capacity is ample.  Top-k routing with softmax-normalized
+gates; optional always-on shared experts (DeepSeek-V3); auxiliary
+load-balance loss (Switch-style) returned to the caller.
+
+The shard_map expert-parallel (all-to-all) variant lives in
+``repro.models.moe_ep`` and is the §Perf beyond-baseline optimization.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+class MoEParams(NamedTuple):
+    router: jnp.ndarray        # (d, E)
+    w_gate: jnp.ndarray        # (E, d, f)
+    w_up: jnp.ndarray          # (E, d, f)
+    w_down: jnp.ndarray        # (E, f, d)
+    shared_gate: jnp.ndarray   # (d, n_shared*f) or (d, 0)
+    shared_up: jnp.ndarray
+    shared_down: jnp.ndarray   # (n_shared*f, d)
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> MoEParams:
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.n_experts, m.d_expert
+    sf = m.n_shared * f
+    ks = jax.random.split(key, 7)
+    return MoEParams(
+        router=layers.dense_init(ks[0], (d, E), dtype=jnp.float32),
+        w_gate=layers.dense_init(ks[1], (E, d, f), in_axis=1, dtype=dtype),
+        w_up=layers.dense_init(ks[2], (E, d, f), in_axis=1, dtype=dtype),
+        w_down=layers.dense_init(ks[3], (E, f, d), in_axis=1, dtype=dtype),
+        shared_gate=layers.dense_init(ks[4], (d, sf), dtype=dtype),
+        shared_up=layers.dense_init(ks[5], (d, sf), dtype=dtype),
+        shared_down=layers.dense_init(ks[6], (sf, d), in_axis=0, dtype=dtype),
+    )
+
+
+def route(router_w: jnp.ndarray, x: jnp.ndarray, top_k: int):
+    """x: (T, d) -> (gate_weights (T,k), expert_ids (T,k), aux_loss, probs)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    gw, ids = jax.lax.top_k(probs, top_k)
+    gw = gw / jnp.maximum(gw.sum(-1, keepdims=True), 1e-9)  # renormalize
+    # Switch-style load-balance aux: E * sum_e f_e * P_e
+    E = probs.shape[-1]
+    hard = jax.nn.one_hot(ids[:, 0], E)
+    aux = E * jnp.mean(hard.mean(0) * probs.mean(0)) * E
+    return gw.astype(x.dtype), ids, aux, probs
+
+
+def capacity(T: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(T * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)                            # round up to 8
+
+
+def apply(p: MoEParams, cfg: ModelConfig, x: jnp.ndarray,
+          expert_axis: str | None = None):
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar).
+
+    expert_axis: mesh axis name to pin the dispatch buffer's expert dim to
+    (requires an ambient mesh, i.e. tracing under ``with mesh:``).  Without
+    the constraint GSPMD may replicate the expert einsums across the model
+    axis — the §Perf 'moeshard' fix.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    gw, ids, aux, _ = route(p.router, xt, m.top_k)           # (T,k)
+
+    E, C = m.n_experts, capacity(T, cfg)
+    flat_ids = ids.reshape(-1)                               # (T*k,)
+    oh = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)        # (T*k, E)
+    pos = jnp.cumsum(oh, axis=0) - 1                         # position in expert
+    pos = jnp.take_along_axis(pos, flat_ids[:, None], axis=1)[:, 0]   # (T*k,)
+    keep = pos < C
+    safe_pos = jnp.where(keep, pos, 0)
+
+    # scatter tokens into the (E, C, d) buffer (dropped tokens excluded)
+    src = jnp.repeat(xt, m.top_k, axis=0) * keep[:, None].astype(xt.dtype)
+    buf = jnp.zeros((E, C, d), xt.dtype).at[flat_ids, safe_pos].add(src)
+
+    def pin(t):
+        if expert_axis is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            t, P(expert_axis, *([None] * (t.ndim - 1))))
+
+    buf = pin(buf)
+    # expert FFN (E, C, d) -> (E, C, d)
+    g = layers.act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", buf, p.w_gate))
+    u = jnp.einsum("ecd,edf->ecf", buf, p.w_up)
+    eo = pin(jnp.einsum("ecf,efd->ecd", g * u, p.w_down))
+
+    # gather back and combine with gate weights
+    out_tk = eo[flat_ids, safe_pos] * keep[:, None].astype(eo.dtype)  # (T*k, d)
+    out = (out_tk.reshape(T, m.top_k, d) * gw[..., None]).sum(1)
+
+    if m.n_shared:
+        out = out + layers.swiglu(xt, p.shared_gate, p.shared_up,
+                                  p.shared_down, cfg.act)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,202 @@
+"""Mamba-2 SSD mixer (arXiv:2405.21060), TPU-adapted.
+
+The SSD (state-space duality) forward is implemented in its *chunked
+matmul form*: the sequence is split into chunks of Q tokens; intra-chunk
+interactions are dense (C B^T ∘ decay) matmuls (MXU-friendly) and the
+inter-chunk recurrence is a short ``lax.scan`` over chunk states — this is
+precisely the TPU-native re-blocking of the paper's GPU kernel (DESIGN.md
+§4).  The intra-chunk core also exists as a Pallas kernel
+(``repro.kernels.ssd_chunk``).
+
+Decode is the O(1) recurrent update on the (B, H, P, N) state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+CHUNK = 128
+
+
+class SSMParams(NamedTuple):
+    w_in: jnp.ndarray       # (d, 2*di + 2*g*N + nh)   -> z, x, B, C, dt
+    conv_w: jnp.ndarray     # (conv_dim, d_conv)
+    conv_b: jnp.ndarray     # (conv_dim,)
+    a_log: jnp.ndarray      # (nh,)
+    d_skip: jnp.ndarray     # (nh,)
+    dt_bias: jnp.ndarray    # (nh,)
+    norm: jnp.ndarray       # (di,)
+    w_out: jnp.ndarray      # (di, d)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return s, di, nh, conv_dim
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> SSMParams:
+    s, di, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    in_dim = 2 * di + 2 * s.n_groups * s.d_state + nh
+    return SSMParams(
+        w_in=layers.dense_init(ks[0], (d, in_dim), dtype=dtype),
+        conv_w=(jax.random.normal(ks[1], (conv_dim, s.d_conv)) / s.d_conv).astype(dtype),
+        conv_b=jnp.zeros((conv_dim,), dtype),
+        a_log=jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        d_skip=jnp.ones((nh,), jnp.float32),
+        dt_bias=jnp.zeros((nh,), jnp.float32),
+        norm=jnp.zeros((di,), dtype),
+        w_out=layers.dense_init(ks[2], (di, d), dtype=dtype),
+    )
+
+
+def _split(cfg: ModelConfig, proj: jnp.ndarray):
+    s, di, nh, _ = _dims(cfg)
+    gN = s.n_groups * s.d_state
+    z, xs, Bc, Cc, dt = jnp.split(proj, [di, 2 * di, 2 * di + gN, 2 * di + 2 * gN], axis=-1)
+    return z, xs, Bc, Cc, dt
+
+
+def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d.  seq: (B,S,Cd), w: (Cd,K).  Returns (out,
+    new_state) where state is the last K-1 inputs for streaming decode."""
+    B, S, Cd = seq.shape
+    K = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((B, K - 1, Cd), seq.dtype)
+    else:
+        pad = state.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)               # (B, S+K-1, Cd)
+    idx = jnp.arange(S)[:, None] + jnp.arange(K)[None, :]    # (S, K)
+    windows = full[:, idx]                                   # (B, S, K, Cd)
+    out = jnp.einsum("bskc,ck->bsc", windows, w) + b
+    new_state = full[:, S:][:, -(K - 1):] if S >= K - 1 else full[:, -(K - 1):]
+    return out, new_state
+
+
+def ssd_chunked(xh, dt, A, Bc, Cc, h0=None, use_kernel: bool = False):
+    """SSD forward in chunked matmul form.
+
+    xh: (B,S,H,P), dt: (B,S,H), A: (H,) (negative), Bc/Cc: (B,S,G,N).
+    Returns (y (B,S,H,P), h_last (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bc.shape[2], Bc.shape[3]
+    rep = H // G
+    Q = min(CHUNK, S)
+    nc = S // Q
+    assert nc * Q == S, "seq len must be divisible by the SSD chunk"
+
+    f32 = jnp.float32
+    xh = xh.astype(f32).reshape(Bsz, nc, Q, H, P)
+    dt = dt.astype(f32).reshape(Bsz, nc, Q, H)
+    Bc = Bc.astype(f32).reshape(Bsz, nc, Q, G, N)
+    Cc = Cc.astype(f32).reshape(Bsz, nc, Q, G, N)
+    BH = jnp.repeat(Bc, rep, axis=3)                         # (B,nc,Q,H,N)
+    CH = jnp.repeat(Cc, rep, axis=3)
+
+    dtA = dt * A[None, None, None, :]                        # (B,nc,Q,H)
+    cum = jnp.cumsum(dtA, axis=2)                            # within-chunk
+    seg_total = cum[:, :, -1, :]                             # (B,nc,H)
+
+    # intra-chunk: scores[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j, j <= i
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y_intra, state_c = kops.ssd_chunk(xh, dt, dtA, cum, BH, CH)
+    else:
+        scores = jnp.einsum("bcqhn,bckhn->bchqk", CH, BH)
+        diff = (cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+                - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3))  # (B,nc,H,Q,K)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, None]
+        # mask INSIDE the exponent: exp of masked entries would overflow and
+        # poison the backward pass through jnp.where (NaN gradients)
+        decay = jnp.exp(jnp.where(tri, diff, -1e9))
+        w = jnp.where(tri, scores * decay, 0.0)
+        w = w * dt.transpose(0, 1, 3, 2)[:, :, :, None, :]   # weight by dt_j
+        y_intra = jnp.einsum("bchqk,bckhp->bcqhp", w, xh)
+        # chunk state contribution: sum_j exp(seg_total - cum_j) dt_j B_j x_j
+        sdec = jnp.exp(seg_total[:, :, None, :] - cum) * dt  # (B,nc,Q,H)
+        state_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", sdec, BH, xh)
+
+    # inter-chunk recurrence over chunk states
+    gamma = jnp.exp(seg_total)                               # (B,nc,H)
+
+    def scan_fn(h, xs):
+        g_c, s_c = xs                                        # (B,H), (B,H,P,N)
+        h_next = h * g_c[:, :, None, None] + s_c
+        return h_next, h                                     # emit h at chunk START
+
+    h_init = jnp.zeros((Bsz, H, P, N), f32) if h0 is None else h0.astype(f32)
+    h_last, h_starts = jax.lax.scan(
+        scan_fn, h_init,
+        (gamma.transpose(1, 0, 2), state_c.transpose(1, 0, 2, 3, 4)),
+    )
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+
+    # inter contribution: C_i . (exp(cum_i) * h_start)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", CH * jnp.exp(cum)[..., None], h_starts)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, h_last
+
+
+def apply(p: SSMParams, cfg: ModelConfig, x: jnp.ndarray, *,
+          cache: Optional[tuple] = None, use_kernel: bool = False, **_):
+    """Mamba-2 block body.  cache = (conv_state, ssm_state) for decode."""
+    s, di, nh, conv_dim = _dims(cfg)
+    B, S, d = x.shape
+    proj = x @ p.w_in
+    z, xs, Bc, Cc, dt = _split(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_state = cache[0] if cache is not None else None
+    conv_out, new_conv_state = _causal_conv(conv_in, p.conv_w, p.conv_b, conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :di]
+    Bc = conv_out[..., di:di + s.n_groups * s.d_state]
+    Cc = conv_out[..., di + s.n_groups * s.d_state:]
+
+    P = s.head_dim
+    xh = xs.reshape(B, S, nh, P)
+    Bc = Bc.reshape(B, S, s.n_groups, s.d_state)
+    Cc = Cc.reshape(B, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)
+    A = -jnp.exp(p.a_log)
+
+    if cache is None or S > 1:
+        h0 = cache[1] if cache is not None else None
+        y, h_last = ssd_chunked(xh, dt, A, Bc, Cc, h0=h0, use_kernel=use_kernel)
+    else:
+        # single-token recurrent decode: h = h*exp(dtA) + dt * B (x) x
+        h0 = cache[1]
+        rep = nh // s.n_groups
+        BH = jnp.repeat(Bc, rep, axis=2)[:, 0]               # (B,H,N)
+        CH = jnp.repeat(Cc, rep, axis=2)[:, 0]
+        dt1 = dt[:, 0]                                       # (B,H)
+        decay = jnp.exp(dt1 * A[None, :])                    # (B,H)
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dt1, BH, xh[:, 0].astype(jnp.float32))
+        h_last = h0.astype(jnp.float32) * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", CH, h_last)[:, None]  # (B,1,H,P)
+
+    y = y + xh.astype(jnp.float32) * p.d_skip[None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), p.norm, cfg.norm_eps)
+    out = y @ p.w_out
+    new_cache = (new_conv_state, h_last) if cache is not None else None
+    return out, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s, di, nh, conv_dim = _dims(cfg)
+    return (jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+            jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32))

@@ -1,0 +1,233 @@
+"""Config-driven model: embedding -> (prefix blocks) -> scanned periodic
+block stack -> final norm -> head.
+
+Heterogeneous layer patterns (Jamba 1:7 hybrid, Gemma-2 local/global pairs,
+DeepSeek-V3 first-3-dense + MoE, ...) are handled by scanning over *periods*:
+the layer pattern repeats every ``period`` layers, parameters of equal
+pattern-positions are stacked with a leading period axis, and one
+``lax.scan`` body runs a whole period.  This keeps the lowered HLO small
+(61-layer models compile as 1-2 scan bodies) — essential for the 512-device
+dry-runs.
+
+All functions are functional: ``init`` returns a params pytree, ``apply``
+is pure.  ``Model.apply`` supports three modes:
+  * train/score: full sequence, no cache -> logits (B,S,V)
+  * prefill:     full sequence, cache=empty -> logits + filled cache
+  * decode:      S=1 token against a cache at ``cache_index``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, layers
+
+
+@dataclasses.dataclass(frozen=True)
+class Stack:
+    """Static description of the layer stack decomposition."""
+    prefix: tuple          # tuple[LayerMeta] — unscanned leading layers
+    pattern: tuple         # tuple[LayerMeta] — metas of one period (by position)
+    n_periods: int
+
+
+def build_stack(cfg: ModelConfig) -> Stack:
+    n_prefix = cfg.moe.first_k_dense if cfg.moe else 0
+    body = cfg.n_layers - n_prefix
+    if cfg.hybrid_attn_period:
+        period = cfg.hybrid_attn_period
+    elif cfg.local_global:
+        period = 2
+    elif cfg.moe and cfg.moe.every > 1:
+        period = cfg.moe.every
+    else:
+        period = 1
+    assert body % period == 0, (cfg.name, body, period)
+    prefix = tuple(blocks.layer_meta(cfg, i) for i in range(n_prefix))
+    pattern = tuple(blocks.layer_meta(cfg, n_prefix + p) for p in range(period))
+    return Stack(prefix=prefix, pattern=pattern, n_periods=body // period)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, *, dtype=jnp.float32,
+                 remat: bool = False, use_kernel: bool = False,
+                 unroll: bool = False, attn_impl: str = "naive",
+                 expert_axis: str | None = None,
+                 remat_policy: str | None = None,
+                 ep_mesh=None):
+        cfg.validate()
+        self.cfg = cfg
+        self.dtype = dtype
+        self.remat = remat
+        self.use_kernel = use_kernel
+        # attn_impl="blockwise": online-softmax over KV blocks (no S^2
+        # temps) — the §Perf memory-term optimization
+        self.attn_impl = attn_impl
+        # expert_axis: pin MoE dispatch buffers to this mesh axis (§Perf)
+        self.expert_axis = expert_axis
+        # unroll=True replaces the period scan with a python loop — bigger
+        # HLO, but exact cost_analysis (XLA amortizes scan-body costs);
+        # used by the dry-run probes (launch/dryrun.py).
+        self.unroll = unroll
+        # remat_policy: None = full remat; "mixer" = save mixer outputs so
+        # the backward pass does not re-run attention/SSD forward — §Perf
+        self.remat_policy = remat_policy
+        # ep_mesh: run MoE layers via the explicit all-to-all expert-
+        # parallel schedule (models/moe_ep.py) on this mesh — §Perf
+        self.ep_mesh = ep_mesh
+        self.stack = build_stack(cfg)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        kE, kH, kP, kB, kM = jax.random.split(key, 5)
+        params: dict[str, Any] = {
+            "embed": layers.embed_init(kE, (cfg.vocab, cfg.d_model), self.dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.dense_init(kH, (cfg.d_model, cfg.vocab), dtype=self.dtype)
+        if cfg.frontend == "audio":
+            params["mask_emb"] = 0.02 * jax.random.normal(kM, (cfg.d_model,)).astype(self.dtype)
+
+        params["prefix"] = [
+            blocks.init_block(k, cfg, m, self.dtype)
+            for k, m in zip(jax.random.split(kP, max(len(self.stack.prefix), 1)),
+                            self.stack.prefix)
+        ]
+        # stacked periodic body: for each pattern position, stack n_periods inits
+        body = []
+        keys = jax.random.split(kB, self.stack.n_periods * len(self.stack.pattern))
+        for p, meta in enumerate(self.stack.pattern):
+            per = [
+                blocks.init_block(keys[c * len(self.stack.pattern) + p], cfg, meta, self.dtype)
+                for c in range(self.stack.n_periods)
+            ]
+            body.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per))
+        params["body"] = body
+        return params
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        cache = {
+            "prefix": [
+                blocks.init_block_cache(cfg, m, batch, max_len, dtype)
+                for m in self.stack.prefix
+            ],
+            "body": [
+                jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (self.stack.n_periods,) + x.shape).copy(),
+                    blocks.init_block_cache(cfg, meta, batch, max_len, dtype),
+                )
+                for meta in self.stack.pattern
+            ],
+        }
+        return cache
+
+    # ----------------------------------------------------------------- embed
+    def embed(self, params, batch: dict) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            x = batch["embeds"].astype(self.dtype)
+            if "mask" in batch:      # masked-prediction: blank masked frames
+                x = jnp.where(batch["mask"][..., None], params["mask_emb"], x)
+            return x
+        tok = params["embed"][batch["tokens"]]
+        if cfg.frontend == "vision" and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(self.dtype), tok], axis=1)
+        else:
+            x = tok
+        return x
+
+    def head(self, params, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = x @ w.astype(x.dtype)
+        return layers.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+    # ----------------------------------------------------------------- apply
+    def apply(self, params, batch: dict, *, cache=None, cache_index=None):
+        """Returns (logits, new_cache, aux_loss)."""
+        cfg = self.cfg
+        x = self.embed(params, batch)
+        B, S, _ = x.shape
+        if cache_index is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        else:
+            positions = cache_index + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        ci = cache_index if cache_index is not None else 0
+
+        aux_total = jnp.zeros((), jnp.float32)
+        new_prefix_caches = []
+        for li, meta in enumerate(self.stack.prefix):
+            c = cache["prefix"][li] if cache is not None else None
+            x, nc, aux = blocks.apply_block(
+                params["prefix"][li], cfg, meta, x, positions=positions,
+                cache=c, cache_index=ci, use_kernel=self.use_kernel,
+                    attn_impl=self.attn_impl, expert_axis=self.expert_axis,
+                    ep_mesh=self.ep_mesh)
+            new_prefix_caches.append(nc)
+            aux_total += aux
+
+        def period_body(carry, xs):
+            x, aux_tot = carry
+            params_slice, cache_slice = xs
+            new_caches = []
+            for p, meta in enumerate(self.stack.pattern):
+                c = cache_slice[p] if cache_slice is not None else None
+                x, nc, aux = blocks.apply_block(
+                    params_slice[p], cfg, meta, x, positions=positions,
+                    cache=c, cache_index=ci, use_kernel=self.use_kernel,
+                    attn_impl=self.attn_impl, expert_axis=self.expert_axis,
+                    ep_mesh=self.ep_mesh)
+                new_caches.append(nc)
+                aux_tot = aux_tot + aux
+            return (x, aux_tot), new_caches
+
+        if self.remat and self.remat_policy == "mixer":
+            policy = jax.checkpoint_policies.save_only_these_names("mixer_out")
+            body_fn = jax.checkpoint(period_body, policy=policy)
+        elif self.remat:
+            body_fn = jax.checkpoint(period_body)
+        else:
+            body_fn = period_body
+        cache_xs = cache["body"] if cache is not None else None
+        if self.unroll:
+            carry = (x, aux_total)
+            outs = []
+            for c in range(self.stack.n_periods):
+                sl = jax.tree_util.tree_map(lambda a: a[c], params["body"])
+                csl = (jax.tree_util.tree_map(lambda a: a[c], cache_xs)
+                       if cache_xs is not None else None)
+                carry, nc = body_fn(carry, (sl, csl))
+                outs.append(nc)
+            (x, aux_total) = carry
+            new_body_caches = (
+                jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+                if cache is not None else outs)
+        else:
+            (x, aux_total), new_body_caches = jax.lax.scan(
+                body_fn, (x, aux_total), (params["body"], cache_xs))
+
+        logits = self.head(params, x)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"prefix": new_prefix_caches, "body": new_body_caches}
+        return logits, new_cache, aux_total
+
+
+def make_model(cfg_or_name, *, reduced: bool = False, **kw) -> Model:
+    if isinstance(cfg_or_name, str):
+        from repro import configs
+        cfg = configs.get(cfg_or_name, reduced=reduced)
+    else:
+        cfg = cfg_or_name
+    return Model(cfg, **kw)

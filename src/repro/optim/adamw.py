@@ -1,0 +1,60 @@
+"""AdamW, implemented in-house (no optax in this environment).
+
+Supports a ``moment_dtype`` knob: float32 for exactness or bfloat16 to
+halve optimizer memory (the DeepSeek-V3-scale dry-runs are optimizer-state
+bound; see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # first moments  (pytree like params)
+    nu: Any          # second moments
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    # global-norm clip
+    sq = jax.tree_util.tree_map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), grads)
+    gnorm = jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq))
+    scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g
+        v_new = b2 * v32 + (1 - b2) * g * g
+        mhat, vhat = m_new / c1, v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), gnorm

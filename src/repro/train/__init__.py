@@ -1,0 +1,1 @@
+from repro.train.trainer import TrainState, loss_fn, make_train_step, train_loop  # noqa: F401

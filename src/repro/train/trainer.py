@@ -1,0 +1,85 @@
+"""Training loop: loss, train_step factory, and the host-side loop.
+
+``make_train_step`` builds the jittable step used both by the CPU examples
+(reduced models) and by the 512-device dry-run (full configs, lowered only).
+The step is mesh-agnostic: sharding comes from the in/out shardings that
+``launch/dryrun.py`` / ``launch/train.py`` attach via jax.jit.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def loss_fn(model: Model, params, batch: dict):
+    """Cross-entropy next-token / masked-prediction loss (+ MoE aux)."""
+    logits, _, aux = model.apply(params, batch)
+    targets = batch["targets"]
+    V = logits.shape[-1]
+    if model.cfg.frontend == "vision":
+        # loss on text positions only (patch prefix carries no targets)
+        logits = logits[:, -targets.shape[1]:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if model.cfg.frontend == "audio" and "mask" in batch:
+        m = batch["mask"].astype(jnp.float32)
+        loss = (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    else:
+        loss = nll.mean()
+    return loss + 0.01 * aux, (loss, aux)
+
+
+def make_train_step(model: Model, *, peak_lr=3e-4, warmup=100, total=10_000,
+                    weight_decay=0.1, moment_dtype=jnp.float32):
+    def train_step(state: TrainState, batch: dict):
+        (tot, (loss, aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch), has_aux=True)(state.params)
+        lr = cosine_schedule(state.opt.step + 1, peak_lr=peak_lr, warmup=warmup, total=total)
+        new_params, new_opt, gnorm = adamw_update(
+            state.params, grads, state.opt, lr=lr, weight_decay=weight_decay)
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def init_state(model: Model, key, moment_dtype=jnp.float32) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params, moment_dtype))
+
+
+def train_loop(model: Model, data_iter, *, steps: int, seed: int = 0,
+               log_every: int = 10, state: Optional[TrainState] = None,
+               checkpoint_dir: Optional[str] = None, ckpt_every: int = 0,
+               **step_kwargs):
+    """Host-side loop used by examples and launch/train.py."""
+    if state is None:
+        state = init_state(model, jax.random.PRNGKey(seed))
+    step_fn = jax.jit(make_train_step(model, **step_kwargs))
+    history = []
+    t0 = time.time()
+    for i, batch in zip(range(steps), data_iter):
+        state, metrics = step_fn(state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"], m["wall"] = i, time.time() - t0
+            history.append(m)
+            print(f"step {i:5d} loss {m['loss']:.4f} gnorm {m['grad_norm']:.3f} "
+                  f"lr {m['lr']:.2e} t {m['wall']:.1f}s")
+        if checkpoint_dir and ckpt_every and i and i % ckpt_every == 0:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(checkpoint_dir, state, step=i)
+    return state, history

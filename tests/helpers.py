@@ -1,0 +1,56 @@
+"""Shared test utilities: small instances and random loop-free strategies."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import network
+from repro.core.traffic import Phi, renormalize
+
+
+def small_instances(seeds=(0,)):
+    """A few small Table-II-style instances for fast tests."""
+    out = []
+    for s in seeds:
+        out.append(network.table_ii_instance("abilene", seed=s))
+        out.append(network.table_ii_instance("balanced-tree", seed=s))
+    return out
+
+
+def random_loopfree_phi(inst: network.Instance, seed: int = 0) -> Phi:
+    """Sample a random feasible loop-free strategy.
+
+    Loop-freedom by construction: draw a random node potential per stage and
+    allow link fractions only 'downhill'; every node keeps some CPU mass
+    (when allowed) so each row is normalizable.  Rows with no downhill
+    neighbour at the final stage fall back to the shortest-path successor.
+    """
+    from repro.core import gp
+
+    rng = np.random.default_rng(seed)
+    A, K1, V = inst.A, inst.K1, inst.V
+    adj = np.asarray(inst.adj)
+
+    dist, _ = gp.expanded_shortest_path(inst)
+    dist = np.asarray(dist)                                   # (A,K1,V)
+
+    e = np.zeros((A, K1, V, V), dtype=np.float32)
+    c = np.zeros((A, K1, V), dtype=np.float32)
+    cpu_ok = np.asarray(inst.cpu_allowed())
+    for a in range(A):
+        for k in range(K1):
+            if cpu_ok[a, k]:
+                # intermediate stages: any random potential works because
+                # the CPU direction always lets a stuck row terminate
+                pot = rng.permutation(V).astype(float)
+                downhill = adj & (pot[None, :] < pot[:, None])
+                c[a, k] = rng.uniform(0.2, 1.0, V)
+            else:
+                # final stage: use the shortest-path cost-to-go as the
+                # potential — every non-destination node has a strictly
+                # downhill neighbour, so downhill routing reaches d_a
+                pot = dist[a, k]
+                downhill = adj & (pot[None, :] < pot[:, None] - 1e-9)
+            e[a, k] = rng.uniform(0.1, 1.0, (V, V)) * downhill
+    return renormalize(inst, Phi(e=jnp.asarray(e), c=jnp.asarray(c)))

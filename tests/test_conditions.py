@@ -1,0 +1,98 @@
+"""Proposition 1 / Theorem 1: the Fig. 4 degenerate example.
+
+Construct the paper's counterexample network where a strategy satisfies the
+KKT necessary condition (5) yet is arbitrarily suboptimal, and verify:
+  * the bad strategy passes the KKT check but fails the sufficiency check,
+  * GP started *from the bad strategy* escapes to the global optimum,
+  * the optimum satisfies both conditions.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conditions, gp, network, traffic
+
+RHO = 0.3  # the path cost; direct-link cost is 1.  D(phi*)/D(phi_bad) = rho.
+
+
+def fig4_instance() -> network.Instance:
+    """Nodes 0-1-2-3 in a line plus a direct link 0->3.
+
+    One application, |T_a| = 1, destination node 3, data input at node 0.
+    Computation is free at node 3 and prohibitive elsewhere; all costs
+    linear.  The line links cost rho/3 each, the direct link costs 1.
+    """
+    V = 4
+    adj = np.zeros((V, V), bool)
+    for u, v in [(0, 1), (1, 2), (2, 3), (0, 3)]:
+        adj[u, v] = adj[v, u] = True
+    lp = np.zeros((V, V))
+    for u, v in [(0, 1), (1, 2), (2, 3)]:
+        lp[u, v] = lp[v, u] = RHO / 3
+    lp[0, 3] = lp[3, 0] = 1.0
+    return network.Instance(
+        adj=jnp.asarray(adj),
+        link_param=jnp.asarray(lp, dtype=jnp.float32),
+        link_kind=network.LINEAR,
+        comp_param=jnp.asarray([1e4, 1e4, 1e4, 1e-6], dtype=jnp.float32),
+        comp_kind=network.LINEAR,
+        L=jnp.asarray([[1.0, 1.0]], dtype=jnp.float32),
+        w=jnp.asarray([[1.0, 0.0]], dtype=jnp.float32),
+        wnode=jnp.ones(V, dtype=jnp.float32),
+        r=jnp.asarray([[1.0, 0.0, 0.0, 0.0]], dtype=jnp.float32),
+        dst=jnp.asarray([3]),
+        n_tasks=jnp.asarray([1]),
+        stage_mask=jnp.ones((1, 2), bool),
+    )
+
+
+def bad_phi(inst) -> traffic.Phi:
+    """The Fig. 4 KKT-satisfying strategy: all data on the direct link.
+
+    Nodes 1, 2 carry zero traffic and point 'backwards', which makes (5)
+    hold vacuously there while delta would reveal the cheap path.
+    """
+    e = np.zeros((1, 2, 4, 4), dtype=np.float32)
+    c = np.zeros((1, 2, 4), dtype=np.float32)
+    # stage 0 (data): node 0 -> direct link; 1 -> 0; 2 -> 1; 3 computes
+    e[0, 0, 0, 3] = 1.0
+    e[0, 0, 1, 0] = 1.0
+    e[0, 0, 2, 1] = 1.0
+    c[0, 0, 3] = 1.0
+    # stage 1 (results): destination is 3; other nodes point toward 3
+    e[0, 1, 0, 3] = 1.0
+    e[0, 1, 1, 2] = 1.0
+    e[0, 1, 2, 3] = 1.0
+    return traffic.Phi(e=jnp.asarray(e), c=jnp.asarray(c))
+
+
+def test_bad_phi_is_feasible_and_costs_one():
+    inst = fig4_instance()
+    phi = bad_phi(inst)
+    assert float(traffic.feasibility_violation(inst, phi)) < 1e-6
+    assert float(traffic.total_cost(inst, phi)) == pytest.approx(1.0, rel=1e-3)
+
+
+def test_kkt_holds_but_sufficiency_fails():
+    inst = fig4_instance()
+    phi = bad_phi(inst)
+    assert float(conditions.kkt_residual(inst, phi)) <= 1e-4        # (5) holds
+    assert float(conditions.sufficiency_residual(inst, phi)) > 0.1  # (6) fails
+
+
+def test_gp_escapes_degenerate_point_to_global_optimum():
+    inst = fig4_instance()
+    res = gp.solve(inst, bad_phi(inst), alpha=0.2, max_iters=300)
+    # optimum: route 0->1->2->3 (cost rho), compute at 3 (free)
+    assert res.final_cost == pytest.approx(RHO, rel=0.02)
+    assert float(conditions.sufficiency_residual(inst, res.phi)) < 1e-2
+    assert float(conditions.kkt_residual(inst, res.phi)) < 1e-2
+
+
+def test_ratio_matches_proposition_1():
+    """D(phi*) / D(phi_bad) == rho, for arbitrary rho."""
+    inst = fig4_instance()
+    bad_cost = float(traffic.total_cost(inst, bad_phi(inst)))
+    opt = gp.solve(inst, bad_phi(inst), alpha=0.2, max_iters=300)
+    assert opt.final_cost / bad_cost == pytest.approx(RHO, rel=0.03)

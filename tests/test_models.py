@@ -1,0 +1,167 @@
+"""Model behaviour tests: decode==teacher-forcing, MLA absorption, SSD
+chunking vs naive recurrence, MoE routing properties, serving engine."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import mla, moe, ssm
+from repro.models.transformer import make_model
+
+
+def _ample_capacity(cfg):
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+
+
+DECODE_ARCHS = [
+    "tinyllama-1.1b", "gemma2-9b", "mixtral-8x22b", "deepseek-v3-671b",
+    "mamba2-780m", "jamba-v0.1-52b", "phi4-mini-3.8b",
+]
+
+
+@pytest.mark.parametrize("name", DECODE_ARCHS)
+def test_decode_matches_teacher_forcing(name):
+    """KV-cache decode produces the same logits as a full forward pass.
+
+    MoE capacity is made ample so token-drop nondeterminism across batch
+    shapes does not enter (dropping is tested separately)."""
+    cfg = _ample_capacity(configs.get(name, reduced=True))
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full, _, _ = model.apply(params, {"tokens": toks})
+    cache = model.init_cache(B, max_len=S + 4, dtype=jnp.float32)
+    pre, cache, _ = model.apply(params, {"tokens": toks}, cache=cache,
+                                cache_index=jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full), atol=2e-4)
+    nxt = jnp.argmax(full[:, -1:], -1).astype(jnp.int32)
+    dec, cache, _ = model.apply(params, {"tokens": nxt}, cache=cache,
+                                cache_index=jnp.int32(S))
+    ref, _, _ = model.apply(params, {"tokens": jnp.concatenate([toks, nxt], 1)})
+    np.testing.assert_allclose(np.asarray(dec[:, -1]), np.asarray(ref[:, -1]), atol=2e-3)
+
+
+def test_mla_absorbed_decode_equals_train_path():
+    cfg = configs.get("deepseek-v3-671b", reduced=True)
+    p = mla.init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full, _ = mla.apply(p, cfg, x, positions=pos)
+    cache = mla.init_cache(cfg, B, S, dtype=jnp.float32)
+    absorbed, _ = mla.apply(p, cfg, x, positions=pos, cache=cache,
+                            cache_index=jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(absorbed), np.asarray(full), atol=1e-4)
+
+
+def test_mla_cache_is_compressed():
+    """MLA's cache must be rank-(c_kv+rope) per token, not per-head KV."""
+    cfg = configs.get("deepseek-v3-671b")
+    cache = mla.init_cache(cfg, batch=1, max_len=8)
+    per_tok = sum(np.prod(c.shape[2:]) for c in cache)
+    full_kv = 2 * cfg.n_heads * cfg.hd
+    assert per_tok == cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim   # 576
+    assert per_tok < full_kv / 50                                    # ~57x smaller
+
+
+def test_ssd_chunked_equals_naive_recurrence():
+    """The chunked SSD matmul form equals the token-by-token recurrence."""
+    B, S, H, P, G, N = 2, 64, 4, 8, 2, 16
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bc = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    Cc = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    y_chunk, h_chunk = ssm.ssd_chunked(xh, dt, A, Bc, Cc)
+
+    rep = H // G
+    BH = jnp.repeat(Bc, rep, axis=2)
+    CH = jnp.repeat(Cc, rep, axis=2)
+    h = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        decay = jnp.exp(dt[:, t] * A[None, :])
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, t], BH[:, t], xh[:, t])
+        ys.append(jnp.einsum("bhn,bhpn->bhp", CH[:, t], h))
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_decode_continues_prefill_state():
+    cfg = configs.get("mamba2-780m", reduced=True)
+    p = ssm.init(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 32
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, S + 1, cfg.d_model))
+    full, _ = ssm.apply(p, cfg, x)
+    cache = ssm.init_cache(cfg, B, dtype=jnp.float32)
+    pre, cache = ssm.apply(p, cfg, x[:, :S], cache=cache)
+    dec, _ = ssm.apply(p, cfg, x[:, S:], cache=cache)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, S:]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_moe_routing_properties():
+    cfg = configs.get("mixtral-8x22b", reduced=True)
+    p = moe.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+    gw, ids, aux, probs = moe.route(p.router, x, cfg.moe.top_k)
+    assert gw.shape == (64, cfg.moe.top_k)
+    np.testing.assert_allclose(np.asarray(gw.sum(-1)), 1.0, atol=1e-5)
+    assert int(ids.max()) < cfg.moe.n_experts
+    # top-1 id has the max prob
+    np.testing.assert_array_equal(np.asarray(ids[:, 0]), np.asarray(probs.argmax(-1)))
+    assert float(aux) > 0
+
+
+def test_moe_capacity_dropping_bounded():
+    """With capacity_factor=1.0 and adversarially skewed routing, output
+    stays finite and the un-dropped fraction dominates."""
+    cfg = configs.get("mixtral-8x22b", reduced=True)
+    p = moe.init(jax.random.PRNGKey(0), cfg)
+    x = jnp.broadcast_to(jax.random.normal(jax.random.PRNGKey(2), (1, 1, cfg.d_model)),
+                         (2, 32, cfg.d_model))    # identical tokens -> same expert
+    out, aux = moe.apply(p, cfg, x)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_sliding_window_masks_long_range():
+    """With window W, a token W+1 away must not influence attention."""
+    from repro.models import attention
+    cfg = dataclasses.replace(configs.get("mixtral-8x22b", reduced=True), window=8)
+    p = attention.init(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 32
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out1, _ = attention.apply(p, cfg, x, positions=pos, window=8)
+    x2 = x.at[:, 0].add(100.0)                    # perturb far-away token
+    out2, _ = attention.apply(p, cfg, x2, positions=pos, window=8)
+    np.testing.assert_allclose(np.asarray(out1[:, 16:]), np.asarray(out2[:, 16:]),
+                               atol=1e-4)
+    assert float(jnp.abs(out1[:, 0] - out2[:, 0]).max()) > 1e-3
+
+
+def test_serving_engine_end_to_end():
+    from repro.serve.engine import ServeEngine
+    cfg = _ample_capacity(configs.get("tinyllama-1.1b", reduced=True))
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, slots=2, max_len=64)
+    uids = [eng.submit(np.array([1, 2, 3]), max_new=4) for _ in range(3)]
+    done = eng.run()
+    assert set(done) == set(uids)
+    for out in done.values():
+        assert len(out) == 4 and all(0 <= t < cfg.vocab for t in out)
