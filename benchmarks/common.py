@@ -1,10 +1,12 @@
-"""Shared benchmark utilities (timing, CSV output)."""
+"""Shared benchmark utilities (timing, CSV output, GPResult rows)."""
 
 from __future__ import annotations
 
 import json
 import os
 import time
+
+import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                            "results")
@@ -34,3 +36,23 @@ class Timer:
     @property
     def us(self) -> float:
         return self.seconds * 1e6
+
+
+def result_row(res) -> dict:
+    """JSON-serializable summary of a ``gp.GPResult``.
+
+    Histories are dense jnp device arrays; trim to the committed prefix and
+    convert via numpy so json doesn't choke on them."""
+    trimmed = res.trim()
+    hist = np.asarray(trimmed.cost_history, dtype=float)
+    return {
+        "final_cost": trimmed.final_cost,
+        "iterations": int(trimmed.iterations),
+        "initial_cost": float(hist[0]),
+        "cost_history": hist.tolist(),
+    }
+
+
+def speedup_report(serial_s: float, batched_s: float, n: int) -> str:
+    return (f"serial:{serial_s:.2f}s|batched:{batched_s:.2f}s|"
+            f"speedup:{serial_s / max(batched_s, 1e-9):.2f}x|n:{n}")

@@ -4,16 +4,18 @@ the input packet size L_(a,0).
 Paper claim: when input packets are larger (relative to results), GP
 offloads computation closer to the requester — data packets travel fewer
 hops, result packets more.
+
+The L0 sweep runs as one batched scenario family (``fig7-packetsize``).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, save_json
-from repro.core import gp, network, traffic
+from benchmarks.common import emit, save_json, speedup_report
+from repro.core import scenarios, traffic
 
-L0_VALUES = [2.0, 5.0, 10.0, 20.0, 40.0]
+L0_VALUES = scenarios.FIG7_L0
 
 
 def hop_counts(inst, phi) -> tuple[float, float]:
@@ -29,23 +31,28 @@ def hop_counts(inst, phi) -> tuple[float, float]:
 
 
 def main() -> dict:
+    kw = dict(alpha=0.1, max_iters=300)
+    cold = scenarios.run_sweep("fig7-packetsize", **kw)       # compiles
+    sweep = scenarios.run_sweep("fig7-packetsize", **kw)      # warm timing
+    serial = scenarios.run_sweep_serial("fig7-packetsize", **kw)
+
     out = {}
-    for L0 in L0_VALUES:
-        inst = network.build_instance(
-            network.TOPOLOGIES["abilene"](), n_apps=3, n_tasks=2, n_sources=3,
-            link_mean=15.0, comp_mean=10.0, seed=0,
-            packet_sizes=np.array([L0, L0 / 2, 0.01]),
-        )
-        res = gp.solve(inst, alpha=0.1, max_iters=300)
-        dh, rh = hop_counts(inst, res.phi)
+    for sc, res in zip(sweep.scenarios, sweep.results):
+        L0 = sc.meta["L0"]
+        dh, rh = hop_counts(sc.instance, res.phi)
         out[L0] = {"data_hops": dh, "result_hops": rh, "cost": res.final_cost}
         emit(f"fig7_L0_{L0}", 0.0, f"data_hops:{dh:.2f}|result_hops:{rh:.2f}")
     # claim: data hop count decreases as L0 grows (offload near requester)
     dhs = [out[L]["data_hops"] for L in L0_VALUES]
     monotone_trend = dhs[-1] < dhs[0]
-    save_json("fig7.json", {"curve": out, "data_hops_shrink": monotone_trend})
+    save_json("fig7.json", {"curve": out, "data_hops_shrink": monotone_trend,
+                            "gp_batched_seconds_warm": sweep.seconds,
+                            "gp_batched_seconds_cold": cold.seconds,
+                            "gp_serial_seconds": serial.seconds})
     emit("fig7_summary", 0.0,
          "data_hops=" + "|".join(f"{d:.2f}" for d in dhs) + f" shrink={monotone_trend}")
+    emit("fig7_gp_speedup", sweep.seconds * 1e6,
+         speedup_report(serial.seconds, sweep.seconds, len(L0_VALUES)))
     return out
 
 

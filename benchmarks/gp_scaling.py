@@ -1,12 +1,14 @@
 """GP algorithm scaling: per-iteration wall time vs network/application
-count (complexity table of Section IV), plus the shard_map variant."""
+count (complexity table of Section IV), the shard_map variant, and the
+batched scenario engine's per-member iteration cost vs batch size."""
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from benchmarks.common import Timer, emit, save_json
-from repro.core import distributed, gp, network
+from benchmarks.common import Timer, emit, save_json, speedup_report
+from repro.core import batch, compat, distributed, gp, network, scenarios
 
 
 def time_gp_iteration(inst, reps: int = 5) -> float:
@@ -19,6 +21,23 @@ def time_gp_iteration(inst, reps: int = 5) -> float:
     return t.us / reps
 
 
+def time_batched_iteration(name: str, B: int, chunk: int = 32) -> float:
+    """us per iteration per member of the device-resident batched scan."""
+    insts = [network.table_ii_instance(name, seed=s, rate_scale=2.0)
+             for s in range(B)]
+    binst = batch.pad_instances(insts)
+    phi = jax.vmap(gp.init_phi)(binst)
+    carry = jax.vmap(gp._init_carry)(binst, phi)
+    args = (jnp.float32(0.05), jnp.float32(1e-4), jnp.int32(10**6),
+            jnp.int32(10**6), None, None)
+    carry, _ = gp._scan_chunk_batched(binst, carry, *args, length=chunk)  # warm
+    jax.block_until_ready(carry.cost)
+    with Timer() as t:
+        carry, _ = gp._scan_chunk_batched(binst, carry, *args, length=chunk)
+        jax.block_until_ready(carry.cost)
+    return t.us / chunk / B
+
+
 def main():
     rows = {}
     for name in ["abilene", "balanced-tree", "fog", "geant", "sw-queue"]:
@@ -28,14 +47,34 @@ def main():
                       "us_per_iter": us}
         emit(f"gp_iter_{name}", us, f"V:{inst.V}|stages:{inst.A * inst.K1}")
 
+    # batched engine: per-member iteration cost vs batch size (the
+    # vectorization win the scenario layer exploits)
+    batched = {}
+    for B in (1, 8, 32):
+        us = time_batched_iteration("abilene", B)
+        batched[B] = us
+        emit(f"gp_batched_iter_B{B}", us, f"us_per_iter_per_member|V:11")
+    rows["batched_abilene"] = {str(b): u for b, u in batched.items()}
+
+    # end-to-end ensemble: batched engine vs one-at-a-time (warm)
+    kw = dict(alpha=0.1, max_iters=200)
+    skw = {"n_seeds": 16}
+    scenarios.run_sweep("seed-ensemble", sweep_kwargs=skw, **kw)          # warm
+    scenarios.run_sweep_serial("seed-ensemble", sweep_kwargs={"n_seeds": 2}, **kw)
+    bat = scenarios.run_sweep("seed-ensemble", sweep_kwargs=skw, **kw)
+    ser = scenarios.run_sweep_serial("seed-ensemble", sweep_kwargs=skw, **kw)
+    emit("gp_ensemble16_speedup", bat.seconds * 1e6,
+         speedup_report(ser.seconds, bat.seconds, 16))
+    rows["ensemble16"] = {"batched_s": bat.seconds, "serial_s": ser.seconds,
+                          "speedup": ser.seconds / max(bat.seconds, 1e-9)}
+
     # shard_map distributed GP (1 host device here; the collective pattern
     # is what the multi-device dry-run exercises)
     inst = network.table_ii_instance("abilene", seed=0)
-    mesh = jax.make_mesh((1,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("stage",))
     with Timer() as t:
         res = distributed.solve_sharded(inst, mesh, alpha=0.05, max_iters=30)
-    emit("gp_sharded_30iters", t.us, f"final_cost:{res.cost_history[-1]:.3f}")
+    emit("gp_sharded_30iters", t.us, f"final_cost:{float(res.cost_history[-1]):.3f}")
     save_json("gp_scaling.json", rows)
 
 

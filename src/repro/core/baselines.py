@@ -89,8 +89,9 @@ def lcof(inst: Instance, **solve_kwargs) -> gp.GPResult:
 def lpr_sc(inst: Instance) -> gp.GPResult:
     """Linear-Program-Rounded for Service Chains (congestion-oblivious)."""
     _, phi = gp.expanded_shortest_path(inst)
-    cost = float(total_cost(inst, phi))
-    return gp.GPResult(phi=phi, cost_history=[cost], residual_history=[], iterations=0)
+    cost = total_cost(inst, phi)
+    return gp.GPResult(phi=phi, cost_history=cost[None],
+                       residual_history=jnp.zeros((0,)), iterations=0)
 
 
 ALL_BASELINES = {"SPOC": spoc, "LCOF": lcof, "LPR-SC": lpr_sc}

@@ -1,0 +1,178 @@
+"""Instance padding & stacking: heterogeneous scenarios as one batched pytree.
+
+The paper's evaluation (Figs. 5-7) is a statement about *families* of
+scenarios — seven Table II topologies x input-rate scalings x random seeds.
+To solve a family in one device program we pad every :class:`Instance` to a
+common (V, A, K1) envelope and stack the results along a leading batch axis;
+``jax.vmap(gp.solve_scan)`` then runs the whole family as one XLA executable.
+
+Padding invariants (DESIGN.md §9 records the full argument):
+
+  * **Dead nodes** (index >= the instance's true V): no adjacency, zero
+    input rate, unit CPU capacity.  They receive zero traffic, so with
+    D(0) = C(0) = 0 they contribute exactly nothing to the objective, and
+    the per-stage linear systems stay nonsingular (their rows reduce to the
+    identity).
+  * **Dead applications / stages**: zero rate, ``stage_mask`` False, so
+    ``renormalize`` forces their strategy rows to zero and ``cpu_allowed``
+    excludes them from every direction set.
+  * **Cost-family kinds are static metadata** and must agree across the
+    batch (they select python-level code paths); mixed-kind families must be
+    grouped by kind first (``scenarios.run_sweep`` does this automatically).
+
+Under these invariants ``flows``, ``marginals`` and ``gp_step`` restricted
+to the real (node, app, stage) block are identical to the unpadded
+computation, so batched solves reproduce serial solves (tests/test_batch.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import Instance
+from repro.core.traffic import Phi
+
+# Packet-size fill for padded stages — keep the same positive floor the
+# builder applies to real stages (DESIGN.md §8) so padded entries can never
+# introduce a zero-size degeneracy if a masked stage is ever touched.
+_L_FILL = 0.01
+
+
+def next_pow2(n: int) -> int:
+    """Bucket quantizer shared by solver compaction (gp.solve_batched) and
+    sweep size-class grouping (scenarios.run_sweep) — the two must agree."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, target: int, fill) -> jnp.ndarray:
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - cur)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def pad_instance(inst: Instance, V: int, A: int, K1: int) -> Instance:
+    """Pad one instance to the (V, A, K1) envelope (no batch axis yet)."""
+    if V < inst.V or A < inst.A or K1 < inst.K1:
+        raise ValueError(
+            f"target shape ({V},{A},{K1}) smaller than instance "
+            f"({inst.V},{inst.A},{inst.K1})"
+        )
+
+    adj = _pad_axis(_pad_axis(inst.adj, 0, V, False), 1, V, False)
+    link_param = _pad_axis(_pad_axis(inst.link_param, 0, V, 0.0), 1, V, 0.0)
+    # dead nodes get unit CPU capacity: they carry zero workload, and
+    # C(0) = 0 for every cost family, but a zero capacity would make the
+    # queue family's marginal blow up at exactly 0 flow.
+    comp_param = _pad_axis(inst.comp_param, 0, V, 1.0)
+    wnode = _pad_axis(inst.wnode, 0, V, 1.0)
+
+    L = _pad_axis(_pad_axis(inst.L, 1, K1, _L_FILL), 0, A, _L_FILL)
+    w = _pad_axis(_pad_axis(inst.w, 1, K1, 0.0), 0, A, 0.0)
+    r = _pad_axis(_pad_axis(inst.r, 1, V, 0.0), 0, A, 0.0)
+    dst = _pad_axis(inst.dst, 0, A, 0)
+    n_tasks = _pad_axis(inst.n_tasks, 0, A, 0)
+    stage_mask = _pad_axis(_pad_axis(inst.stage_mask, 1, K1, False), 0, A, False)
+
+    return dataclasses.replace(
+        inst, adj=adj, link_param=link_param, comp_param=comp_param,
+        wnode=wnode, L=L, w=w, r=r, dst=dst, n_tasks=n_tasks,
+        stage_mask=stage_mask,
+    )
+
+
+def batch_envelope(insts: Sequence[Instance]) -> tuple[int, int, int]:
+    """Common (V, A, K1) envelope of a scenario family."""
+    return (
+        max(i.V for i in insts),
+        max(i.A for i in insts),
+        max(i.K1 for i in insts),
+    )
+
+
+def pad_instances(insts: Sequence[Instance]) -> Instance:
+    """Stack heterogeneous instances into one Instance with a leading batch
+    axis (every array field becomes ``(B, ...)``).
+
+    All instances must share ``link_kind`` / ``comp_kind`` — these are
+    static pytree metadata selecting python-level cost code, so they cannot
+    vary along a traced batch axis.
+    """
+    if not insts:
+        raise ValueError("pad_instances needs at least one instance")
+    kinds = {(i.link_kind, i.comp_kind) for i in insts}
+    if len(kinds) > 1:
+        raise ValueError(
+            f"cannot batch across cost families {sorted(kinds)}; group "
+            "instances by (link_kind, comp_kind) first"
+        )
+    V, A, K1 = batch_envelope(insts)
+    padded = [pad_instance(i, V, A, K1) for i in insts]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+
+def batch_size(binst: Instance) -> int:
+    """Leading batch-axis length of a stacked Instance."""
+    return int(binst.adj.shape[0])
+
+
+def instance_slice(binst: Instance, b: int) -> Instance:
+    """Extract padded member ``b`` of a stacked Instance (still padded)."""
+    return jax.tree_util.tree_map(lambda x: x[b], binst)
+
+
+def pad_phi(phi: Phi, V: int, A: int, K1: int,
+            inst: Optional[Instance] = None) -> Phi:
+    """Pad a strategy to the (V, A, K1) envelope.
+
+    Padded rows are zero, which is exactly right for every degenerate row
+    (dead apps/stages, final stages at forwarding-dead nodes).  The one
+    non-degenerate padded row class is (real app, non-final stage, dead
+    node) — constraint (1) wants those to sum to 1 even though they carry
+    zero traffic.  When ``inst`` (the unpadded instance) is given, those
+    rows are seeded with full local offloading (phi_c = 1), matching what
+    ``init_phi`` converges to there and keeping the padded strategy
+    feasible everywhere.
+    """
+    V0 = phi.e.shape[2]
+    e = phi.e
+    for axis, tgt in ((0, A), (1, K1), (2, V), (3, V)):
+        e = _pad_axis(e, axis, tgt, 0.0)
+    c = phi.c
+    for axis, tgt in ((0, A), (1, K1), (2, V)):
+        c = _pad_axis(c, axis, tgt, 0.0)
+    if inst is not None and V > V0:
+        dead = jnp.arange(V)[None, None, :] >= V0                 # (1,1,V)
+        cpu_ok = _pad_axis(_pad_axis(
+            inst.cpu_allowed(), 1, K1, False), 0, A, False)       # (A,K1)
+        c = jnp.where(dead & cpu_ok[:, :, None], 1.0, c)
+    return Phi(e=e, c=c)
+
+
+def pad_phis(phis: Sequence[Phi], insts: Sequence[Instance]) -> Phi:
+    """Stack per-instance strategies to match ``pad_instances(insts)``."""
+    V, A, K1 = batch_envelope(insts)
+    padded = [pad_phi(p, V, A, K1, inst) for p, inst in zip(phis, insts)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+
+def unpad_phi(phi: Phi, inst: Instance) -> Phi:
+    """Strip padding back to an instance's true (V, A, K1)."""
+    A, K1, V = inst.A, inst.K1, inst.V
+    return Phi(e=phi.e[:A, :K1, :V, :V], c=phi.c[:A, :K1, :V])
+
+
+def valid_mask(binst: Instance, insts: Sequence[Instance]) -> np.ndarray:
+    """(B, V) bool: which nodes of each padded member are real."""
+    B, V = batch_size(binst), int(binst.adj.shape[1])
+    mask = np.zeros((B, V), dtype=bool)
+    for b, inst in enumerate(insts):
+        mask[b, : inst.V] = True
+    return mask

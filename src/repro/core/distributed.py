@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import costs, gp
+from repro.core import compat, costs, gp
 from repro.core.marginals import BIG
 from repro.core.network import Instance
 from repro.core.traffic import (
@@ -138,12 +138,12 @@ def sharded_gp_step(mesh: Mesh, inst_template: Instance, axis: str = "stage"):
         residual = jax.lax.pmax(jnp.maximum(jnp.max(exc_e), jnp.max(exc_c)), axis)
         return new_phi.e, new_phi.c, cost, residual
 
-    smapped = jax.shard_map(
+    smapped = compat.shard_map(
         step,
         mesh=mesh,
         in_specs=(app, app, app, app, app, app, rep, rep, rep, rep, app, app, rep),
         out_specs=(app, app, rep, rep),
-        check_vma=False,
+        check=False,
     )
     return jax.jit(smapped)
 
@@ -183,5 +183,5 @@ def solve_sharded(
 
     phi_full = Phi(e=jnp.asarray(np.asarray(phi_e)[:A_orig]),
                    c=jnp.asarray(np.asarray(phi_c)[:A_orig]))
-    return gp.GPResult(phi=phi_full, cost_history=cost_hist,
-                       residual_history=res_hist, iterations=it)
+    return gp.GPResult(phi=phi_full, cost_history=jnp.asarray(cost_hist),
+                       residual_history=jnp.asarray(res_hist), iterations=it)

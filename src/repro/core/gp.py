@@ -24,7 +24,9 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import batch as batch_mod
 from repro.core import costs
 from repro.core.marginals import BIG, Marginals, marginals
 from repro.core.network import Instance
@@ -42,12 +44,51 @@ class GPState(NamedTuple):
     residual: jnp.ndarray    # sufficiency-condition residual (0 => optimal)
 
 
+class GPScan(NamedTuple):
+    """On-device result of :func:`solve_scan` (a strict superset of GPState).
+
+    Histories are dense ``(max_iters[+1],)`` arrays: entries past
+    ``iterations`` repeat the converged value (the carry is frozen once the
+    early-stop predicate fires), so the arrays are safe to consume without
+    trimming and stack cleanly under ``jax.vmap``.
+    """
+
+    phi: Phi
+    cost: jnp.ndarray              # final cost
+    residual: jnp.ndarray          # final sufficiency residual
+    cost_history: jnp.ndarray      # (max_iters + 1,), [0] = initial cost
+    residual_history: jnp.ndarray  # (max_iters,)
+    iterations: jnp.ndarray        # int32, #iterations actually committed
+
+
 @dataclasses.dataclass
 class GPResult:
+    """Host-side solve summary.
+
+    ``cost_history`` / ``residual_history`` are dense jnp arrays (NOT
+    python lists): ``cost_history[0]`` is the initial cost and entry ``i``
+    is the cost after iteration ``i``.  Results from :func:`solve` are
+    already trimmed; un-trimmed dense results (e.g. assembled from
+    :func:`solve_scan`) repeat the converged value past ``iterations`` —
+    ``trim()`` cuts them back to the committed prefix.
+    """
+
     phi: Phi
-    cost_history: list
-    residual_history: list
+    cost_history: jnp.ndarray
+    residual_history: jnp.ndarray
     iterations: int
+
+    def __post_init__(self):
+        self.cost_history = jnp.asarray(self.cost_history)
+        self.residual_history = jnp.asarray(self.residual_history)
+
+    def trim(self) -> "GPResult":
+        n = int(self.iterations)
+        return dataclasses.replace(
+            self,
+            cost_history=self.cost_history[: n + 1],
+            residual_history=self.residual_history[:n],
+        )
 
     @property
     def final_cost(self) -> float:
@@ -271,12 +312,116 @@ def init_phi(inst: Instance) -> Phi:
 
 
 # ---------------------------------------------------------------------------
-# Solver driver
+# Solver drivers
 # ---------------------------------------------------------------------------
+#
+# Three entry points share one device-resident iteration (DESIGN.md §10):
+#
+#   * solve_scan  — the whole loop as ONE jitted lax.scan of static length
+#                   with on-device early-stop masking; composes with
+#                   jax.vmap for batched scenario families (core/batch.py,
+#                   core/scenarios.py).
+#   * solve       — the user-facing driver: runs the same scan in chunks and
+#                   checks the early-stop flag on host once per chunk, so a
+#                   run that converges in 50 iterations does not pay for
+#                   max_iters=400 worth of frozen device work.
+#   * solve_loop  — the original per-iteration host-sync python loop, kept
+#                   as the semantic reference (tests/test_batch.py asserts
+#                   scan == loop on every Table II scenario).
 
 @functools.partial(jax.jit, static_argnames=("scaled",))
 def _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled=False):
     return gp_step(inst, phi, alpha, allowed_e, allowed_c, scaled)
+
+
+class _ScanCarry(NamedTuple):
+    phi: Phi
+    best_cost: jnp.ndarray   # float32, monotone-descent tracker
+    stall: jnp.ndarray       # int32, iterations without improvement
+    done: jnp.ndarray        # bool, early-stop latch
+    iters: jnp.ndarray       # int32, #iterations committed so far
+    cost: jnp.ndarray        # float32, last committed cost
+    residual: jnp.ndarray    # float32, last committed residual
+
+
+def _init_carry(inst: Instance, phi: Phi) -> _ScanCarry:
+    cost0 = jnp.asarray(total_cost(inst, phi), jnp.float32)
+    return _ScanCarry(
+        phi=phi,
+        best_cost=cost0,
+        stall=jnp.int32(0),
+        done=jnp.asarray(False),
+        iters=jnp.int32(0),
+        cost=cost0,
+        residual=jnp.float32(jnp.inf),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("length", "scaled"))
+def _scan_chunk(
+    inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
+    *, length: int, scaled: bool = False,
+):
+    """Advance the solve by up to ``length`` iterations entirely on device.
+
+    Early-stop is a *mask*, not a break: once ``done`` latches (residual
+    below tol, ladder-stationary for ``patience`` iterations, or the
+    ``max_iters`` budget spent) the carry is frozen and subsequent steps
+    re-emit the converged (cost, residual), keeping history shapes static.
+    """
+
+    def body(c: _ScanCarry, _):
+        state = gp_step(inst, c.phi, alpha, allowed_e, allowed_c, scaled)
+        frz = c.done
+        phi = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(frz, old, new), state.phi, c.phi)
+        cost = jnp.where(frz, c.cost, state.cost)
+        residual = jnp.where(frz, c.residual, state.residual)
+        improved = state.cost < c.best_cost * (1 - 1e-6)
+        best = jnp.where(frz | ~improved, c.best_cost, state.cost)
+        stall = jnp.where(frz, c.stall, jnp.where(improved, 0, c.stall + 1))
+        iters = c.iters + jnp.where(frz, 0, 1).astype(jnp.int32)
+        done = frz | (residual <= tol) | (stall >= patience) | (iters >= max_iters)
+        nc = _ScanCarry(phi=phi, best_cost=best, stall=stall, done=done,
+                        iters=iters, cost=cost, residual=residual)
+        return nc, (cost, residual)
+
+    return jax.lax.scan(body, carry, None, length=length)
+
+
+def solve_scan(
+    inst: Instance,
+    phi0: Optional[Phi] = None,
+    *,
+    alpha: float = 0.02,
+    max_iters: int = 400,
+    tol: float = 1e-4,
+    allowed_e: Optional[jnp.ndarray] = None,
+    allowed_c: Optional[jnp.ndarray] = None,
+    patience: int = 40,
+    scaled: bool = False,
+) -> GPScan:
+    """Algorithm 1 as a single device-resident ``lax.scan``.
+
+    No host syncs inside the loop; returns dense histories (see
+    :class:`GPScan`).  This is the vmap/jit-composable primitive — batched
+    families go through ``jax.vmap(solve_scan)`` (``core/scenarios.py``).
+    """
+    phi = phi0 if phi0 is not None else init_phi(inst)
+    carry0 = _init_carry(inst, phi)
+    carry, (cs, rs) = _scan_chunk(
+        inst, carry0, jnp.float32(alpha), jnp.float32(tol),
+        jnp.int32(patience), jnp.int32(max_iters), allowed_e, allowed_c,
+        length=max_iters, scaled=scaled,
+    )
+    return GPScan(
+        phi=carry.phi, cost=carry.cost, residual=carry.residual,
+        cost_history=jnp.concatenate([carry0.cost[None], cs]),
+        residual_history=rs, iterations=carry.iters,
+    )
+
+
+_SOLVE_CHUNK = 32    # host checks the early-stop latch once per chunk
 
 
 def solve(
@@ -288,30 +433,231 @@ def solve(
     tol: float = 1e-4,
     allowed_e: Optional[jnp.ndarray] = None,
     allowed_c: Optional[jnp.ndarray] = None,
-    track_every: int = 1,
+    track_every: int = 1,   # accepted for API compat; histories are dense now
     patience: int = 40,
     scaled: bool = False,
 ) -> GPResult:
     """Run Algorithm 1 until the sufficiency residual falls below tol.
 
+    Thin chunked driver over the :func:`solve_scan` iteration: the loop body
+    never syncs to host — only the ``done`` latch is read back, once every
+    ``_SOLVE_CHUNK`` iterations — so converged runs stop early while the
+    per-iteration cost stays identical to the fully device-resident scan.
+
     scaled=True enables the quasi-Newton diagonal preconditioner (paper
     Section IV remark on second-order methods)."""
+    del track_every
     phi = phi0 if phi0 is not None else init_phi(inst)
-    cost_hist = [float(total_cost(inst, phi))]
+    carry = _init_carry(inst, phi)
+    cost0 = carry.cost
+    alpha_, tol_ = jnp.float32(alpha), jnp.float32(tol)
+    patience_, max_iters_ = jnp.int32(patience), jnp.int32(max_iters)
+    cost_chunks, res_chunks = [], []
+    steps = 0
+    while steps < max_iters:
+        carry, (cs, rs) = _scan_chunk(
+            inst, carry, alpha_, tol_, patience_, max_iters_,
+            allowed_e, allowed_c,
+            length=min(_SOLVE_CHUNK, max_iters - steps), scaled=scaled,
+        )
+        cost_chunks.append(cs)
+        res_chunks.append(rs)
+        steps += len(cs)
+        if bool(carry.done):
+            break
+    return GPResult(
+        phi=carry.phi,
+        cost_history=jnp.concatenate([cost0[None], *cost_chunks]),
+        residual_history=jnp.concatenate(res_chunks) if res_chunks else jnp.zeros((0,)),
+        iterations=int(carry.iters),
+    ).trim()
+
+
+@functools.partial(jax.jit, static_argnames=("length", "scaled"))
+def _scan_chunk_batched(
+    inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
+    *, length: int, scaled: bool = False,
+):
+    def one(i, c, ae, ac):
+        return _scan_chunk(i, c, alpha, tol, patience, max_iters, ae, ac,
+                           length=length, scaled=scaled)
+
+    return jax.vmap(one)(inst, carry, allowed_e, allowed_c)
+
+
+def _gather(tree, idx: jnp.ndarray):
+    return jax.tree_util.tree_map(lambda x: x[idx], tree)
+
+
+def solve_batched(
+    binst: Instance,
+    phi0: Optional[Phi] = None,
+    *,
+    alpha: float = 0.02,
+    max_iters: int = 400,
+    tol: float = 1e-4,
+    allowed_e: Optional[jnp.ndarray] = None,
+    allowed_c: Optional[jnp.ndarray] = None,
+    patience: int = 40,
+    scaled: bool = False,
+    compact: bool = True,
+) -> GPScan:
+    """Solve a whole scenario family (a ``batch.pad_instances`` pytree with
+    a leading batch axis) in one vmapped device program.
+
+    Semantically ``jax.vmap(solve_scan)`` with two wall-clock refinements
+    (DESIGN.md §10):
+
+      * **chunked early stop** — the loop body never syncs to host; only the
+        batched ``done`` latch is read back once per ``_SOLVE_CHUNK``
+        iterations, and the sweep ends when every member has converged;
+      * **convergence compaction** (``compact=True``) — at chunk boundaries,
+        converged members retire and the active set is re-packed into the
+        next power-of-two bucket, so a long-tailed ensemble does not keep
+        paying for members that finished early.  Bucket sizes are quantized
+        to powers of two to bound XLA recompiles (one per bucket size).
+
+    Histories are dense ``(B, max_iters[+1])`` arrays repeating each
+    member's converged values past its own stop point; ``iterations``
+    reports each member's stop point.
+    """
+    B = int(binst.adj.shape[0])
+    if phi0 is None:
+        phi0 = jax.vmap(init_phi)(binst)
+    carry = jax.vmap(_init_carry)(binst, phi0)
+    alpha_, tol_ = jnp.float32(alpha), jnp.float32(tol)
+    patience_, max_iters_ = jnp.int32(patience), jnp.int32(max_iters)
+
+    # host-side result buffers, indexed by original member id
+    cost_hist = np.zeros((B, max_iters + 1), np.float32)
+    cost_hist[:, 0] = np.asarray(carry.cost)
+    res_hist = np.zeros((B, max_iters), np.float32)
+    out_phi_e = np.asarray(phi0.e).copy()
+    out_phi_c = np.asarray(phi0.c).copy()
+    out_cost = np.asarray(carry.cost).copy()
+    out_res = np.full((B,), np.inf, np.float32)
+    out_iters = np.zeros((B,), np.int32)
+    written = np.zeros((B,), np.int64)     # history filled up to this step
+
+    ids = np.arange(B)                      # lane -> original member (-1: pad)
+    inst_p, ae_p, ac_p = binst, allowed_e, allowed_c
+    # align the initial batch to a power-of-two bucket so every chunk
+    # program in this solve (and any other solve over same-shaped members)
+    # hits the same XLA cache entries as the compaction buckets
+    bucket0 = batch_mod.next_pow2(B)
+    if compact and bucket0 > B:
+        sel = np.concatenate([np.arange(B), np.zeros(bucket0 - B, np.int64)])
+        sel_j = jnp.asarray(sel)
+        inst_p = _gather(inst_p, sel_j)
+        carry = _gather(carry, sel_j)
+        if ae_p is not None:
+            ae_p = ae_p[sel_j]
+        if ac_p is not None:
+            ac_p = ac_p[sel_j]
+        pad0 = jnp.arange(bucket0) >= B
+        carry = carry._replace(done=carry.done | pad0)
+        ids = np.concatenate([ids, np.full(bucket0 - B, -1)])
+    steps = 0
+    while steps < max_iters:
+        length = min(_SOLVE_CHUNK, max_iters - steps)
+        carry, (cs, rs) = _scan_chunk_batched(
+            inst_p, carry, alpha_, tol_, patience_, max_iters_, ae_p, ac_p,
+            length=length, scaled=scaled,
+        )
+        valid = ids >= 0
+        vids = ids[valid]
+        cost_hist[vids, steps + 1: steps + 1 + length] = np.asarray(cs)[valid]
+        res_hist[vids, steps: steps + length] = np.asarray(rs)[valid]
+        steps += length
+        written[vids] = steps
+
+        done = np.asarray(carry.done)
+        # snapshot finals only for lanes retiring this chunk (done, or the
+        # iteration budget just ran out) — phi is the expensive transfer,
+        # (B, A, K1, V, V), and active lanes would overwrite it anyway
+        retiring = valid & (done | (steps >= max_iters))
+        if retiring.any():
+            rids = ids[retiring]
+            out_phi_e[rids] = np.asarray(carry.phi.e)[retiring]
+            out_phi_c[rids] = np.asarray(carry.phi.c)[retiring]
+            out_cost[rids] = np.asarray(carry.cost)[retiring]
+            out_res[rids] = np.asarray(carry.residual)[retiring]
+            out_iters[rids] = np.asarray(carry.iters)[retiring]
+
+        active = valid & ~done
+        n_act = int(active.sum())
+        if n_act == 0:
+            break
+        bucket = batch_mod.next_pow2(n_act)
+        if compact and bucket < len(ids):
+            keep = np.flatnonzero(active)
+            sel = np.concatenate(
+                [keep, np.full(bucket - n_act, keep[0], np.int64)])
+            sel_j = jnp.asarray(sel)
+            inst_p = _gather(inst_p, sel_j)
+            carry = _gather(carry, sel_j)
+            if ae_p is not None:
+                ae_p = ae_p[sel_j]
+            if ac_p is not None:
+                ac_p = ac_p[sel_j]
+            # pad lanes duplicate a live member but start frozen
+            pad = jnp.arange(bucket) >= n_act
+            carry = carry._replace(done=carry.done | pad)
+            ids = np.where(np.arange(bucket) < n_act, ids[sel], -1)
+
+    # dense-history contract: repeat converged values past each member's
+    # retirement chunk
+    for m in range(B):
+        w = int(written[m])
+        cost_hist[m, w + 1:] = cost_hist[m, w]
+        if w > 0:
+            res_hist[m, w:] = res_hist[m, w - 1]
+
+    return GPScan(
+        phi=Phi(e=jnp.asarray(out_phi_e), c=jnp.asarray(out_phi_c)),
+        cost=jnp.asarray(out_cost), residual=jnp.asarray(out_res),
+        cost_history=jnp.asarray(cost_hist),
+        residual_history=jnp.asarray(res_hist),
+        iterations=jnp.asarray(out_iters),
+    )
+
+
+def solve_loop(
+    inst: Instance,
+    phi0: Optional[Phi] = None,
+    *,
+    alpha: float = 0.02,
+    max_iters: int = 400,
+    tol: float = 1e-4,
+    allowed_e: Optional[jnp.ndarray] = None,
+    allowed_c: Optional[jnp.ndarray] = None,
+    patience: int = 40,
+    scaled: bool = False,
+) -> GPResult:
+    """Reference driver: the original per-iteration host-sync python loop.
+
+    Semantically equivalent to :func:`solve` / :func:`solve_scan` (asserted
+    by tests/test_batch.py); kept for differential testing and debugging —
+    use :func:`solve` everywhere else."""
+    phi = phi0 if phi0 is not None else init_phi(inst)
+    cost0 = jnp.asarray(total_cost(inst, phi), jnp.float32)
+    cost_hist = [float(cost0)]
     res_hist = []
     it = 0
-    best_cost, stall = float(cost_hist[0]), 0
+    # bookkeeping stays in float32 so the stop iteration is bit-identical
+    # to the device-resident scan (which cannot use python float64)
+    best_cost, stall = cost0, 0
+    shrink = jnp.float32(1 - 1e-6)
+    tol32 = jnp.float32(tol)
     for it in range(1, max_iters + 1):
         state = _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled)
         phi = state.phi
-        c, r = float(state.cost), float(state.residual)
-        if it % track_every == 0:
-            cost_hist.append(c)
-            res_hist.append(r)
-        if r <= tol:
+        cost_hist.append(float(state.cost))
+        res_hist.append(float(state.residual))
+        if bool(state.residual <= tol32):
             break
-        if c < best_cost * (1 - 1e-6):
-            best_cost, stall = c, 0
+        if bool(state.cost < best_cost * shrink):
+            best_cost, stall = state.cost, 0
         else:
             stall += 1
             if stall >= patience:

@@ -76,13 +76,19 @@ class Instance:
     def degenerate_mask(self) -> jnp.ndarray:
         """(A, K1, V) bool — True where phi must sum to 0 (eq. (1) lower branch).
 
-        Stage K_a at the destination node is the exit of the network.
+        Stage K_a at the destination node is the exit of the network.  A
+        final-stage row at a node with no outgoing links is degenerate too:
+        it has an empty direction set (no CPU option at k = K_a), which only
+        occurs for the masked dead nodes of the batch layer (DESIGN.md §9) —
+        real Table II topologies are connected.
         """
         A, K1, V = self.A, self.K1, self.V
         karr = jnp.arange(K1)[None, :, None]             # (1, K1, 1)
         is_last = karr == self.n_tasks[:, None, None]     # (A, K1, 1)
         is_dst = (jnp.arange(V)[None, None, :] == self.dst[:, None, None])
-        return (is_last & is_dst) | ~self.stage_mask[:, :, None]
+        no_out = ~self.adj.any(axis=1)                    # (V,)
+        return ((is_last & is_dst) | (is_last & no_out[None, None, :])
+                | ~self.stage_mask[:, :, None])
 
     def cpu_allowed(self) -> jnp.ndarray:
         """(A, K1) bool — whether phi_{i0}(a,k) may be nonzero (k < |T_a|)."""

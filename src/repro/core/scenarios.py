@@ -1,0 +1,250 @@
+"""Named scenario sweeps: the paper's figures as batched scenario families.
+
+Fig. 5-7 of the paper are statements about *families* of problem instances —
+Table II topologies x input-rate scalings x random seeds.  This module is
+the registry that expands a named sweep into a list of :class:`Scenario`
+(label + Instance + provenance metadata) and runs whole families through the
+device-resident batched solver (``batch.pad_instances`` +
+``gp.solve_batched``), grouping members by cost family first because the
+cost kinds are static pytree metadata (DESIGN.md §9).
+
+Built-in sweeps:
+
+  * ``fig5``            — the 8 Table II scenarios at their congested-regime
+                          rate scalings (GP vs baselines, Fig. 5)
+  * ``fig6-congestion`` — Abilene across input-rate scalings (Fig. 6)
+  * ``fig7-packetsize`` — Abilene across input packet sizes L_(a,0) (Fig. 7)
+  * ``seed-ensemble``   — one topology, many random seeds (confidence bands)
+  * ``mixed-topology``  — heterogeneous Table II topologies in ONE padded
+                          batch (exercises the V/A padding invariants)
+
+``run_sweep(name)`` solves a family batched; ``run_sweep_serial(name)``
+solves it one instance at a time through ``gp.solve`` — the pair is how the
+benchmark drivers measure the batched-vs-serial speedup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+
+from repro.core import batch, gp, network
+from repro.core.traffic import Phi
+
+# Input-rate scaling per Table II scenario so the networks operate in the
+# congested regime the paper targets (its absolute rates depend on
+# unpublished simulator units; the *relative* algorithm ordering is the
+# claim).  fog's capacities (Table II: s=17, d=20) leave it lightly loaded
+# at 2x — every algorithm already sits at the uncongested optimum — so fog
+# runs at 3.5x to reach the congested regime Fig. 5 depicts.
+FIG5_RATE = {
+    "connected-er": 2.0, "balanced-tree": 2.0, "fog": 3.5, "abilene": 2.0,
+    "lhc": 2.0, "geant": 2.0, "sw-linear": 1.5, "sw-queue": 1.5,
+}
+
+FIG6_SCALES = (0.5, 1.0, 1.5, 2.0, 2.5, 3.0)
+FIG7_L0 = (2.0, 5.0, 10.0, 20.0, 40.0)
+
+# Table II members small enough to batch comfortably on one host device
+# (excludes the V=100 small-world pair).
+SMALL_TABLE_II = ("connected-er", "balanced-tree", "fog", "abilene", "lhc", "geant")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One member of a sweep: a labeled Instance plus provenance."""
+
+    label: str
+    instance: network.Instance
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def kinds(self) -> tuple[int, int]:
+        return (self.instance.link_kind, self.instance.comp_kind)
+
+
+def _fig5(**kw) -> list[Scenario]:
+    seed = kw.get("seed", 0)
+    return [
+        Scenario(
+            label=name,
+            instance=network.table_ii_instance(name, seed=seed, rate_scale=rate),
+            meta={"table_ii": name, "seed": seed, "rate_scale": rate},
+        )
+        for name, rate in FIG5_RATE.items()
+    ]
+
+
+def _fig6_congestion(**kw) -> list[Scenario]:
+    name = kw.get("scenario", "abilene")
+    seed = kw.get("seed", 0)
+    scales = kw.get("scales", FIG6_SCALES)
+    return [
+        Scenario(
+            label=f"{name}@r{scale:g}",
+            instance=network.table_ii_instance(name, seed=seed, rate_scale=scale),
+            meta={"table_ii": name, "seed": seed, "rate_scale": scale},
+        )
+        for scale in scales
+    ]
+
+
+def _fig7_packetsize(**kw) -> list[Scenario]:
+    import numpy as np
+
+    seed = kw.get("seed", 0)
+    l0s = kw.get("l0_values", FIG7_L0)
+    out = []
+    for l0 in l0s:
+        inst = network.build_instance(
+            network.TOPOLOGIES["abilene"](), n_apps=3, n_tasks=2, n_sources=3,
+            link_mean=15.0, comp_mean=10.0, seed=seed,
+            packet_sizes=np.array([l0, l0 / 2, 0.01]),
+        )
+        out.append(Scenario(
+            label=f"abilene@L0={l0:g}", instance=inst,
+            meta={"topology": "abilene", "seed": seed, "L0": l0},
+        ))
+    return out
+
+
+def _seed_ensemble(**kw) -> list[Scenario]:
+    name = kw.get("scenario", "abilene")
+    n_seeds = kw.get("n_seeds", 32)
+    rate = kw.get("rate_scale", 2.0)
+    return [
+        Scenario(
+            label=f"{name}#s{s}",
+            instance=network.table_ii_instance(name, seed=s, rate_scale=rate),
+            meta={"table_ii": name, "seed": s, "rate_scale": rate},
+        )
+        for s in range(n_seeds)
+    ]
+
+
+def _mixed_topology(**kw) -> list[Scenario]:
+    names = kw.get("scenarios", SMALL_TABLE_II)
+    seeds = kw.get("seeds", (0, 1))
+    rate = kw.get("rate_scale", 1.5)
+    return [
+        Scenario(
+            label=f"{name}#s{s}",
+            instance=network.table_ii_instance(name, seed=s, rate_scale=rate),
+            meta={"table_ii": name, "seed": s, "rate_scale": rate},
+        )
+        for name in names
+        for s in seeds
+    ]
+
+
+SWEEPS: dict[str, Callable[..., list[Scenario]]] = {
+    "fig5": _fig5,
+    "fig6-congestion": _fig6_congestion,
+    "fig7-packetsize": _fig7_packetsize,
+    "seed-ensemble": _seed_ensemble,
+    "mixed-topology": _mixed_topology,
+}
+
+
+def register(name: str, build: Callable[..., list[Scenario]]) -> None:
+    """Add a sweep to the registry (used by downstream experiment scripts)."""
+    if name in SWEEPS:
+        raise ValueError(f"sweep {name!r} already registered")
+    SWEEPS[name] = build
+
+
+def expand(name: str, **kw) -> list[Scenario]:
+    """Expand a named sweep into its scenario list."""
+    try:
+        build = SWEEPS[name]
+    except KeyError:
+        raise KeyError(f"unknown sweep {name!r}; have {sorted(SWEEPS)}") from None
+    return build(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Batched execution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepResult:
+    scenarios: list[Scenario]
+    results: list[gp.GPResult]      # aligned with scenarios, phi un-padded
+    seconds: float                  # wall clock for the solve(s)
+    n_batches: int                  # #kind-groups the family was split into
+
+    def by_label(self) -> dict[str, gp.GPResult]:
+        return {s.label: r for s, r in zip(self.scenarios, self.results)}
+
+
+def solve_family(
+    insts: Sequence[network.Instance],
+    phi0s: Optional[Sequence[Phi]] = None,
+    **gp_kwargs,
+) -> list[gp.GPResult]:
+    """Solve same-cost-family instances as ONE padded, vmapped batch.
+
+    Returns per-instance trimmed GPResults with padding stripped from phi
+    and histories taken from the batched dense scan outputs.
+    """
+    binst = batch.pad_instances(insts)
+    phi0 = batch.pad_phis(phi0s, insts) if phi0s is not None else None
+    scan = gp.solve_batched(binst, phi0, **gp_kwargs)
+    out = []
+    for b, inst in enumerate(insts):
+        member = jax.tree_util.tree_map(lambda x: x[b], scan)
+        out.append(gp.GPResult(
+            phi=batch.unpad_phi(member.phi, inst),
+            cost_history=member.cost_history,
+            residual_history=member.residual_history,
+            iterations=int(member.iterations),
+        ).trim())
+    return out
+
+
+def run_sweep(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
+              **gp_kwargs) -> SweepResult:
+    """Expand a sweep and solve it batched.
+
+    Members are grouped by cost family (static metadata, must match within a
+    batch) AND by node-count size class (next power of two): padding a
+    V=11 Abilene member to a V=100 small-world envelope would multiply its
+    per-iteration work ~80x, wiping out the batching win, so differently
+    sized members go into separate device programs instead.
+    """
+    if isinstance(name_or_scenarios, str):
+        scenarios = expand(name_or_scenarios, **(sweep_kwargs or {}))
+    else:
+        scenarios = list(name_or_scenarios)
+    groups: dict[tuple, list[int]] = {}
+    for idx, sc in enumerate(scenarios):
+        key = sc.kinds + (batch.next_pow2(sc.instance.V),)
+        groups.setdefault(key, []).append(idx)
+
+    results: list[Optional[gp.GPResult]] = [None] * len(scenarios)
+    t0 = time.perf_counter()
+    for idxs in groups.values():
+        group_res = solve_family([scenarios[i].instance for i in idxs], **gp_kwargs)
+        for i, r in zip(idxs, group_res):
+            results[i] = r
+    seconds = time.perf_counter() - t0
+    return SweepResult(scenarios=scenarios, results=results, seconds=seconds,
+                       n_batches=len(groups))
+
+
+def run_sweep_serial(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
+                     **gp_kwargs) -> SweepResult:
+    """The serial reference: one ``gp.solve`` per scenario (for speedup
+    comparisons against :func:`run_sweep`)."""
+    if isinstance(name_or_scenarios, str):
+        scenarios = expand(name_or_scenarios, **(sweep_kwargs or {}))
+    else:
+        scenarios = list(name_or_scenarios)
+    t0 = time.perf_counter()
+    results = [gp.solve(sc.instance, **gp_kwargs) for sc in scenarios]
+    seconds = time.perf_counter() - t0
+    return SweepResult(scenarios=scenarios, results=results, seconds=seconds,
+                       n_batches=len(scenarios))

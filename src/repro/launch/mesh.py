@@ -11,13 +11,21 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # NOT repro.core.compat.make_mesh: importing repro.core would build
+    # module-level jnp constants and initialize the backend, which this
+    # module must never do (see module docstring).  Same fallback, inline.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds the 2-pod axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_pod_mesh(data: int, model: int):
@@ -25,18 +33,12 @@ def make_pod_mesh(data: int, model: int):
     chips — the §Perf 'resharding' knob (e.g. 32x8 for archs whose expert /
     kv-head counts don't divide 16)."""
     assert data * model == 256, (data, model)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def make_mini_mesh(data: int = 2, model: int = 4):
     """Small host mesh for CI-grade dry-run tests (8 fake devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

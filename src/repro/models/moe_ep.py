@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import compat
 from repro.models import layers, moe
 
 
@@ -77,12 +78,12 @@ def apply_ep(p: moe.MoEParams, cfg: ModelConfig, x: jnp.ndarray, mesh: Mesh,
 
     rep = P()
     exp = P(model_axis)
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(rep, exp, exp, exp, P(data_axis, None, None)),
         out_specs=(P(data_axis, None, None), rep),
-        check_vma=False,
+        check=False,
     )(p.router, p.w_gate, p.w_up, p.w_down, x)
 
     if m.n_shared:

@@ -1,0 +1,165 @@
+"""Batched scenario engine: padding invariants and solve parity.
+
+The two acceptance properties of the batch layer:
+  (a) the device-resident scan (``solve_scan`` / ``vmap(solve_scan)``)
+      reproduces the reference python-loop driver on Table II scenarios;
+  (b) a padded multi-seed batch reproduces the individual serial solves.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batch, gp, network, scenarios, traffic
+
+SMALL_TABLE_II = ["abilene", "balanced-tree", "connected-er", "fog", "lhc", "geant"]
+
+
+# ---------------------------------------------------------------------------
+# (a) scan == loop == chunked solve
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["abilene", "balanced-tree", "fog"])
+def test_solve_scan_matches_reference_loop(name):
+    inst = network.table_ii_instance(name, seed=0, rate_scale=2.0)
+    loop = gp.solve_loop(inst, alpha=0.1, max_iters=120)
+    scan = gp.solve_scan(inst, alpha=0.1, max_iters=120)
+    fast = gp.solve(inst, alpha=0.1, max_iters=120)
+    assert int(scan.iterations) == loop.iterations == fast.iterations
+    assert float(scan.cost) == pytest.approx(loop.final_cost, rel=1e-5)
+    assert fast.final_cost == pytest.approx(loop.final_cost, rel=1e-5)
+    # identical trajectories, not just identical endpoints
+    n = loop.iterations
+    np.testing.assert_allclose(
+        np.asarray(scan.cost_history[: n + 1]),
+        np.asarray(loop.cost_history), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(fast.cost_history), np.asarray(loop.cost_history), rtol=1e-6)
+
+
+def test_scan_history_dense_contract():
+    """Entries past ``iterations`` repeat the converged value."""
+    inst = network.table_ii_instance("balanced-tree", seed=0)
+    scan = gp.solve_scan(inst, alpha=0.1, max_iters=80)
+    it = int(scan.iterations)
+    ch = np.asarray(scan.cost_history)
+    assert ch.shape == (81,)
+    assert np.all(ch[it:] == ch[it])
+    res = gp.GPResult(phi=scan.phi, cost_history=scan.cost_history,
+                      residual_history=scan.residual_history, iterations=it)
+    trimmed = res.trim()
+    assert trimmed.cost_history.shape == (it + 1,)
+    assert trimmed.residual_history.shape == (it,)
+    assert trimmed.final_cost == pytest.approx(float(scan.cost), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# (b) padded batches reproduce serial solves
+# ---------------------------------------------------------------------------
+
+def test_vmap_solve_scan_padded_table_ii_batch():
+    """vmap(solve_scan) over an 8-member padded batch spanning six Table II
+    topologies matches serial gp.solve within 1e-5 (fixed iteration budget
+    so both paths commit exactly the same number of steps)."""
+    insts = [
+        network.table_ii_instance(n, seed=s, rate_scale=1.5)
+        for n in SMALL_TABLE_II
+        for s in ((0, 1) if n in ("abilene", "geant") else (0,))
+    ]
+    assert len(insts) == 8
+    binst = batch.pad_instances(insts)
+    # tol < 0 disables the residual stop (a residual can hit exactly 0.0 in
+    # one path and 1e-9 in the other); patience off => exactly 60 steps
+    kw = dict(alpha=0.1, max_iters=60, tol=-1.0, patience=10**6)
+    out = jax.vmap(lambda i: gp.solve_scan(i, **kw))(binst)
+    for b, inst in enumerate(insts):
+        ser = gp.solve(inst, **kw)
+        assert float(out.cost[b]) == pytest.approx(ser.final_cost, rel=1e-5), b
+        assert int(out.iterations[b]) == ser.iterations == 60
+
+
+def test_padded_seed_ensemble_reproduces_individual_solves():
+    """An 8-seed padded batch (solve_batched, with compaction) reproduces
+    the 8 individual converged solves."""
+    insts = [network.table_ii_instance("abilene", seed=s, rate_scale=2.0)
+             for s in range(8)]
+    binst = batch.pad_instances(insts)
+    out = gp.solve_batched(binst, alpha=0.1, max_iters=200)
+    for b, inst in enumerate(insts):
+        ser = gp.solve(inst, alpha=0.1, max_iters=200)
+        assert float(out.cost[b]) == pytest.approx(ser.final_cost, rel=1e-5), b
+
+
+# ---------------------------------------------------------------------------
+# padding invariants
+# ---------------------------------------------------------------------------
+
+def test_padding_preserves_cost_and_feasibility():
+    """A padded instance yields the same objective for the (padded) optimal
+    strategy, and padded rows carry no strategy mass."""
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=2.0)
+    res = gp.solve(inst, alpha=0.1, max_iters=100)
+    V, A, K1 = inst.V + 5, inst.A + 2, inst.K1 + 1
+    pinst = batch.pad_instance(inst, V, A, K1)
+    pphi = batch.pad_phi(res.phi, V, A, K1, inst)
+    c0 = float(traffic.total_cost(inst, res.phi))
+    c1 = float(traffic.total_cost(pinst, pphi))
+    assert c1 == pytest.approx(c0, rel=1e-5)
+    assert float(traffic.feasibility_violation(pinst, pphi)) < 1e-4
+    # dead apps/stages must stay degenerate under renormalization
+    rphi = traffic.renormalize(pinst, pphi)
+    assert float(jnp.abs(rphi.e[inst.A:]).max()) == 0.0
+    assert float(jnp.abs(rphi.c[inst.A:]).max()) == 0.0
+    assert float(jnp.abs(rphi.e[:, inst.K1:]).max()) == 0.0
+    # one GP step on the padded instance keeps dead rows dead and stays valid
+    state = gp.gp_step(pinst, rphi, 0.1)
+    fl = traffic.flows(pinst, state.phi)
+    assert bool(traffic.traffic_is_valid(pinst, fl.t))
+    assert float(jnp.abs(state.phi.e[inst.A:]).max()) == 0.0
+
+
+def test_pad_phi_roundtrip():
+    inst = network.table_ii_instance("balanced-tree", seed=1)
+    phi = gp.init_phi(inst)
+    padded = batch.pad_phi(phi, inst.V + 3, inst.A + 1, inst.K1 + 2)
+    back = batch.unpad_phi(padded, inst)
+    np.testing.assert_array_equal(np.asarray(back.e), np.asarray(phi.e))
+    np.testing.assert_array_equal(np.asarray(back.c), np.asarray(phi.c))
+
+
+def test_pad_instances_rejects_mixed_cost_kinds():
+    a = network.table_ii_instance("sw-linear", seed=0)
+    b = network.table_ii_instance("abilene", seed=0)
+    with pytest.raises(ValueError, match="cost famil"):
+        batch.pad_instances([a, b])
+
+
+# ---------------------------------------------------------------------------
+# scenario layer
+# ---------------------------------------------------------------------------
+
+def test_scenario_registry_expands():
+    for name in scenarios.SWEEPS:
+        family = scenarios.expand(
+            name, **({"n_seeds": 2} if name == "seed-ensemble" else {}))
+        assert len(family) >= 2
+        labels = [sc.label for sc in family]
+        assert len(set(labels)) == len(labels)
+    with pytest.raises(KeyError):
+        scenarios.expand("no-such-sweep")
+
+
+def test_run_sweep_groups_by_kind_and_size():
+    """Mixed cost families and far-apart sizes split into separate batches
+    but results stay aligned with the scenario list."""
+    family = scenarios.expand("fig6-congestion", scales=(0.5, 1.0))
+    sweep = scenarios.run_sweep(family, alpha=0.1, max_iters=40,
+                                tol=-1.0, patience=10**6)
+    assert sweep.n_batches == 1
+    assert len(sweep.results) == 2
+    for sc, res in zip(sweep.scenarios, sweep.results):
+        ser = gp.solve(sc.instance, alpha=0.1, max_iters=40,
+                       tol=-1.0, patience=10**6)
+        assert res.final_cost == pytest.approx(ser.final_cost, rel=1e-5)
+        assert res.phi.e.shape == ser.phi.e.shape

@@ -1,16 +1,13 @@
 """shard_map GP: sharded solve must match the single-device solve."""
 
-import jax
 import numpy as np
 import pytest
 
-from repro.core import distributed, gp, network
+from repro.core import compat, distributed, gp, network
 
 
 def _mesh1():
-    return jax.make_mesh(
-        (1,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    return compat.make_mesh((1,), ("stage",))
 
 
 def test_sharded_matches_unsharded_on_single_device():

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.core import conditions, gp, network
+from repro.core import compat, conditions, gp, network
 from repro.models import moe, moe_ep
 from repro.models.transformer import Model
 
@@ -37,8 +37,7 @@ def test_moe_ep_matches_gspmd_moe_single_device():
     p = moe.init(jax.random.PRNGKey(0), cfg)
     x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
     ref, aux_ref = moe.apply(p, cfg, x)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     out, aux = moe_ep.apply_ep(p, cfg, x, mesh)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-4, rtol=2e-4)

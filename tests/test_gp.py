@@ -6,7 +6,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.core import baselines, conditions, gp, network, traffic
 from tests.helpers import random_loopfree_phi, small_instances

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.data.pipeline import SyntheticTokens, batch_for
 from repro.optim.adamw import adamw_init, adamw_update
