@@ -11,12 +11,13 @@ from benchmarks.common import Timer, emit, save_json, speedup_report
 from repro.core import batch, compat, distributed, gp, network, scenarios
 
 
-def time_gp_iteration(inst, reps: int = 5) -> float:
+def time_gp_iteration(inst, reps: int = 5, solver: str = "auto") -> float:
     phi = gp.init_phi(inst)
-    state = gp._jit_step(inst, phi, 0.05, None, None)   # warm compile
+    state = gp._jit_step(inst, phi, 0.05, None, None, False, solver)  # warm
     with Timer() as t:
         for _ in range(reps):
-            state = gp._jit_step(inst, state.phi, 0.05, None, None)
+            state = gp._jit_step(inst, state.phi, 0.05, None, None, False,
+                                 solver)
         jax.block_until_ready(state.phi.e)
     return t.us / reps
 
@@ -46,6 +47,24 @@ def main():
         rows[name] = {"V": inst.V, "A": inst.A, "S": inst.A * inst.K1,
                       "us_per_iter": us}
         emit(f"gp_iter_{name}", us, f"V:{inst.V}|stages:{inst.A * inst.K1}")
+
+    # stage-solver comparison: the batched-LU kernel path (shared
+    # factorization, kernels/batched_solve.py) vs the seed's per-stage
+    # dense solves, across node counts.  "auto" picks dense below
+    # traffic.AUTO_MIN_V on CPU — these rows are where that threshold
+    # comes from (DESIGN.md §12).
+    solver_rows = {}
+    for name in ("connected-er", "geant", "sw-queue"):
+        inst = network.table_ii_instance(name, seed=0, rate_scale=1.5)
+        us_dense = time_gp_iteration(inst, reps=3, solver="dense")
+        us_lu = time_gp_iteration(inst, reps=3, solver="batched_lu")
+        solver_rows[name] = {"V": inst.V, "dense_us": us_dense,
+                             "batched_lu_us": us_lu,
+                             "speedup": us_dense / max(us_lu, 1e-9)}
+        emit(f"gp_iter_solver_{name}", us_lu,
+             f"V:{inst.V}|dense:{us_dense:.0f}us|"
+             f"speedup:{us_dense / max(us_lu, 1e-9):.2f}x")
+    rows["stage_solver"] = solver_rows
 
     # batched engine: per-member iteration cost vs batch size (the
     # vectorization win the scenario layer exploits)

@@ -101,9 +101,26 @@ def pad_instances(insts: Sequence[Instance]) -> Instance:
     """Stack heterogeneous instances into one Instance with a leading batch
     axis (every array field becomes ``(B, ...)``).
 
+    Each member is first padded to the family envelope ``(V, A, K1) =
+    (max V_i, max A_i, max K1_i)`` under the §9 invariants (dead nodes /
+    apps / stages contribute exactly nothing), so e.g. ``adj`` becomes
+    ``(B, V, V)``, ``r`` becomes ``(B, A, V)`` and ``stage_mask``
+    ``(B, A, K1)``.  The result feeds ``jax.vmap(gp.solve_scan)`` or
+    ``gp.solve_batched`` directly.
+
     All instances must share ``link_kind`` / ``comp_kind`` — these are
     static pytree metadata selecting python-level cost code, so they cannot
-    vary along a traced batch axis.
+    vary along a traced batch axis (``scenarios.run_sweep`` groups by kind
+    first).
+
+    Example::
+
+        >>> insts = [network.table_ii_instance("abilene", seed=s)
+        ...          for s in range(8)]
+        >>> binst = batch.pad_instances(insts)
+        >>> binst.adj.shape, binst.r.shape
+        ((8, 11, 11), (8, 3, 11))
+        >>> scan = gp.solve_batched(binst, alpha=0.1)   # one device program
     """
     if not insts:
         raise ValueError("pad_instances needs at least one instance")

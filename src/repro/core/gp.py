@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core import batch as batch_mod
 from repro.core import costs
+from repro.core import traffic as traffic_mod
 from repro.core.marginals import BIG, Marginals, marginals
 from repro.core.network import Instance
 from repro.core.traffic import (
@@ -83,6 +84,20 @@ class GPResult:
         self.residual_history = jnp.asarray(self.residual_history)
 
     def trim(self) -> "GPResult":
+        """Cut dense histories back to the committed iteration prefix.
+
+        ``cost_history`` shrinks to ``(iterations + 1,)`` (entry 0 is the
+        initial cost) and ``residual_history`` to ``(iterations,)``.
+        Idempotent; host-side only (no device work).
+
+        Example::
+
+            >>> res = gp.GPResult(phi=phi, cost_history=jnp.ones(401),
+            ...                   residual_history=jnp.zeros(400),
+            ...                   iterations=57)
+            >>> res.trim().cost_history.shape
+            (58,)
+        """
         n = int(self.iterations)
         return dataclasses.replace(
             self,
@@ -148,9 +163,18 @@ def gp_step(
     allowed_e: Optional[jnp.ndarray] = None,
     allowed_c: Optional[jnp.ndarray] = None,
     scaled: bool = False,
+    solver: str = "auto",
 ) -> GPState:
-    fl = flows(inst, phi)
-    m = marginals(inst, phi, fl)
+    # One batched LU of every (app, stage) system per iteration: the traffic
+    # sweep solves the transposed systems and the marginal recursion the
+    # plain ones from the SAME factors (traffic.stage_factors, DESIGN.md
+    # §12).  The ladder's candidate evaluations below factor their own
+    # (ladder, A, K1)-stacked batch inside the vmap.  "auto" resolves per
+    # backend/size at trace time (traffic.resolve_solver).
+    solver = traffic_mod.resolve_solver(solver, inst.V)
+    fact = traffic_mod.stage_factors(phi.e) if solver == "batched_lu" else None
+    fl = flows(inst, phi, fact, solver=solver)
+    m = marginals(inst, phi, fl, fact, solver=solver)
 
     avail_e = inst.adj[None, None] & ~blocked_sets(inst, phi, m.pdt)
     if allowed_e is not None:
@@ -205,7 +229,7 @@ def gp_step(
             e=phi.e - red_e + share[..., None] * is_min_e,
             c=phi.c - red_c + share * is_min_c,
         ))
-        cand_fl = flows(inst, cand)
+        cand_fl = flows(inst, cand, solver=solver)
         valid = traffic_is_valid(inst, cand_fl.t)
         c_links = jnp.where(inst.adj, costs.cost(inst.link_kind, cand_fl.F, inst.link_param), 0.0)
         c_nodes = costs.cost(inst.comp_kind, cand_fl.G, inst.comp_param)
@@ -329,9 +353,10 @@ def init_phi(inst: Instance) -> Phi:
 #                   as the semantic reference (tests/test_batch.py asserts
 #                   scan == loop on every Table II scenario).
 
-@functools.partial(jax.jit, static_argnames=("scaled",))
-def _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled=False):
-    return gp_step(inst, phi, alpha, allowed_e, allowed_c, scaled)
+@functools.partial(jax.jit, static_argnames=("scaled", "solver"))
+def _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled=False,
+              solver="auto"):
+    return gp_step(inst, phi, alpha, allowed_e, allowed_c, scaled, solver)
 
 
 class _ScanCarry(NamedTuple):
@@ -357,10 +382,10 @@ def _init_carry(inst: Instance, phi: Phi) -> _ScanCarry:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("length", "scaled"))
+@functools.partial(jax.jit, static_argnames=("length", "scaled", "solver"))
 def _scan_chunk(
     inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
-    *, length: int, scaled: bool = False,
+    *, length: int, scaled: bool = False, solver: str = "auto",
 ):
     """Advance the solve by up to ``length`` iterations entirely on device.
 
@@ -371,7 +396,7 @@ def _scan_chunk(
     """
 
     def body(c: _ScanCarry, _):
-        state = gp_step(inst, c.phi, alpha, allowed_e, allowed_c, scaled)
+        state = gp_step(inst, c.phi, alpha, allowed_e, allowed_c, scaled, solver)
         frz = c.done
         phi = jax.tree_util.tree_map(
             lambda new, old: jnp.where(frz, old, new), state.phi, c.phi)
@@ -400,19 +425,39 @@ def solve_scan(
     allowed_c: Optional[jnp.ndarray] = None,
     patience: int = 40,
     scaled: bool = False,
+    solver: str = "auto",
 ) -> GPScan:
     """Algorithm 1 as a single device-resident ``lax.scan``.
 
     No host syncs inside the loop; returns dense histories (see
     :class:`GPScan`).  This is the vmap/jit-composable primitive — batched
     families go through ``jax.vmap(solve_scan)`` (``core/scenarios.py``).
+
+    Shapes: with ``inst`` of extent (V nodes, A apps, K1 = K+1 stages),
+    the result carries ``phi.e (A, K1, V, V)``, ``phi.c (A, K1, V)``,
+    scalar ``cost``/``residual``/``iterations``, ``cost_history
+    (max_iters + 1,)`` and ``residual_history (max_iters,)``.
+
+    Example::
+
+        >>> inst = network.table_ii_instance("abilene", seed=0)
+        >>> scan = gp.solve_scan(inst, alpha=0.1, max_iters=200)
+        >>> float(scan.cost) <= float(scan.cost_history[0])
+        True
+        >>> scan.cost_history.shape, int(scan.iterations) <= 200
+        ((201,), True)
+
+    solver="batched_lu" runs the shared-factorization stage solver
+    (kernels/batched_solve.py); solver="dense" keeps the seed's per-stage
+    ``jnp.linalg.solve`` for differential testing; solver="auto" (default)
+    picks per backend/size (``traffic.resolve_solver``).
     """
     phi = phi0 if phi0 is not None else init_phi(inst)
     carry0 = _init_carry(inst, phi)
     carry, (cs, rs) = _scan_chunk(
         inst, carry0, jnp.float32(alpha), jnp.float32(tol),
         jnp.int32(patience), jnp.int32(max_iters), allowed_e, allowed_c,
-        length=max_iters, scaled=scaled,
+        length=max_iters, scaled=scaled, solver=solver,
     )
     return GPScan(
         phi=carry.phi, cost=carry.cost, residual=carry.residual,
@@ -436,6 +481,7 @@ def solve(
     track_every: int = 1,   # accepted for API compat; histories are dense now
     patience: int = 40,
     scaled: bool = False,
+    solver: str = "auto",
 ) -> GPResult:
     """Run Algorithm 1 until the sufficiency residual falls below tol.
 
@@ -459,6 +505,7 @@ def solve(
             inst, carry, alpha_, tol_, patience_, max_iters_,
             allowed_e, allowed_c,
             length=min(_SOLVE_CHUNK, max_iters - steps), scaled=scaled,
+            solver=solver,
         )
         cost_chunks.append(cs)
         res_chunks.append(rs)
@@ -473,14 +520,14 @@ def solve(
     ).trim()
 
 
-@functools.partial(jax.jit, static_argnames=("length", "scaled"))
+@functools.partial(jax.jit, static_argnames=("length", "scaled", "solver"))
 def _scan_chunk_batched(
     inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
-    *, length: int, scaled: bool = False,
+    *, length: int, scaled: bool = False, solver: str = "auto",
 ):
     def one(i, c, ae, ac):
         return _scan_chunk(i, c, alpha, tol, patience, max_iters, ae, ac,
-                           length=length, scaled=scaled)
+                           length=length, scaled=scaled, solver=solver)
 
     return jax.vmap(one)(inst, carry, allowed_e, allowed_c)
 
@@ -501,6 +548,7 @@ def solve_batched(
     patience: int = 40,
     scaled: bool = False,
     compact: bool = True,
+    solver: str = "auto",
 ) -> GPScan:
     """Solve a whole scenario family (a ``batch.pad_instances`` pytree with
     a leading batch axis) in one vmapped device program.
@@ -520,6 +568,24 @@ def solve_batched(
     Histories are dense ``(B, max_iters[+1])`` arrays repeating each
     member's converged values past its own stop point; ``iterations``
     reports each member's stop point.
+
+    Shapes: for a batch of B members padded to (V, A, K1), returns
+    ``phi.e (B, A, K1, V, V)``, ``phi.c (B, A, K1, V)``, ``cost``/
+    ``residual``/``iterations (B,)``, ``cost_history (B, max_iters + 1)``
+    and ``residual_history (B, max_iters)``, all indexed by the ORIGINAL
+    member order (compaction is internal).  The stage systems of the whole
+    batch run through the batched-LU kernel path as one
+    ``(B * ladder * A * K1, V, V)`` factorization per chunk iteration
+    (vmap over scenarios x batch over stages — DESIGN.md §12).
+
+    Example::
+
+        >>> insts = [network.table_ii_instance("abilene", seed=s)
+        ...          for s in range(4)]
+        >>> binst = batch.pad_instances(insts)
+        >>> scan = gp.solve_batched(binst, alpha=0.1, max_iters=200)
+        >>> scan.cost.shape, scan.cost_history.shape
+        ((4,), (4, 201))
     """
     B = int(binst.adj.shape[0])
     if phi0 is None:
@@ -562,7 +628,7 @@ def solve_batched(
         length = min(_SOLVE_CHUNK, max_iters - steps)
         carry, (cs, rs) = _scan_chunk_batched(
             inst_p, carry, alpha_, tol_, patience_, max_iters_, ae_p, ac_p,
-            length=length, scaled=scaled,
+            length=length, scaled=scaled, solver=solver,
         )
         valid = ids >= 0
         vids = ids[valid]
@@ -633,6 +699,7 @@ def solve_loop(
     allowed_c: Optional[jnp.ndarray] = None,
     patience: int = 40,
     scaled: bool = False,
+    solver: str = "auto",
 ) -> GPResult:
     """Reference driver: the original per-iteration host-sync python loop.
 
@@ -650,7 +717,7 @@ def solve_loop(
     shrink = jnp.float32(1 - 1e-6)
     tol32 = jnp.float32(tol)
     for it in range(1, max_iters + 1):
-        state = _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled)
+        state = _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled, solver)
         phi = state.phi
         cost_hist.append(float(state.cost))
         res_hist.append(float(state.residual))

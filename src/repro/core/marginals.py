@@ -23,13 +23,17 @@ and are the quantities both the sufficiency condition (6) and the GP update
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.network import Instance
-from repro.core.traffic import Flows, Phi, comp_marginals, flows, link_marginals
+from repro.core.traffic import (
+    Flows, Phi, comp_marginals, flows, link_marginals, resolve_solver,
+    stage_factors,
+)
+from repro.kernels import ops
 
 # Marginal assigned to non-existent directions ((i,j) not in E, or CPU at the
 # final stage) — the paper's "infinity" (footnote 4).
@@ -44,38 +48,89 @@ class Marginals(NamedTuple):
     Cp: jnp.ndarray        # (V,)           C'_i(G_i)
 
 
-def pdt_recursion(inst: Instance, phi: Phi, Dp: jnp.ndarray, Cp: jnp.ndarray) -> jnp.ndarray:
-    """Solve recursion (4) for all stages: reverse scan over k, vmap over a."""
+def pdt_recursion(
+    inst: Instance,
+    phi: Phi,
+    Dp: jnp.ndarray,
+    Cp: jnp.ndarray,
+    fact: Optional[ops.BatchedLU] = None,
+    *,
+    solver: str = "auto",
+) -> jnp.ndarray:
+    """Solve recursion (4) for all stages: reverse scan over k, vmap over a.
 
-    def per_app(phi_e_a, phi_c_a, L_a, w_a):
+    Each stage's matrix ``I - Phi_k`` is independent of the chain coupling
+    (only the RHS carries pdt_{k+1}), so the default path factors all
+    (a, k) systems in ONE batched LU (``traffic.stage_factors`` — shareable
+    with the traffic sweep, which solves the transposed system) and keeps
+    only O(V^2) triangular solves inside the sequential scan.
+    """
+    solver = resolve_solver(solver, phi.e.shape[-1])
+    if solver != "batched_lu":
+        return jax.vmap(
+            lambda pe, pc, L_a, w_a: _per_app_dense(inst, Dp, Cp, pe, pc, L_a, w_a)
+        )(phi.e, phi.c, inst.L, inst.w)
+
+    if fact is None:
+        fact = stage_factors(phi.e)
+
+    def per_app(fact_a, phi_e_a, phi_c_a, L_a, w_a):
         link_term = jnp.einsum(
             "kij,kij->ki", phi_e_a, L_a[:, None, None] * Dp[None]
         )  # (K1, V): sum_j phi_ij L_k D'_ij
 
         def step(pdt_next, xs):
-            phi_e_k, phi_c_k, lt_k, w_k = xs
+            fact_k, phi_c_k, lt_k, w_k = xs
             b = lt_k + phi_c_k * (w_k * inst.wnode * Cp + pdt_next)
-            V = phi_e_k.shape[0]
-            pdt_k = jnp.linalg.solve(jnp.eye(V, dtype=b.dtype) - phi_e_k, b)
+            pdt_k = ops.batched_solve_factored(fact_k, b, trans=0)
             pdt_k = jnp.maximum(pdt_k, 0.0)
             return pdt_k, pdt_k
 
         zero = jnp.zeros(inst.V, dtype=phi_e_a.dtype)
         _, pdt_a = jax.lax.scan(
-            step, zero, (phi_e_a, phi_c_a, link_term, w_a), reverse=True
+            step, zero, (fact_a, phi_c_a, link_term, w_a), reverse=True
         )
         return pdt_a
 
-    return jax.vmap(per_app)(phi.e, phi.c, inst.L, inst.w)
+    return jax.vmap(per_app)(fact, phi.e, phi.c, inst.L, inst.w)
 
 
-def marginals(inst: Instance, phi: Phi, fl: Flows | None = None) -> Marginals:
+def _per_app_dense(inst, Dp, Cp, phi_e_a, phi_c_a, L_a, w_a):
+    """Seed-path per-app recursion (dense per-stage solves) — the
+    differential reference for solver="batched_lu"."""
+    link_term = jnp.einsum(
+        "kij,kij->ki", phi_e_a, L_a[:, None, None] * Dp[None]
+    )
+
+    def step(pdt_next, xs):
+        phi_e_k, phi_c_k, lt_k, w_k = xs
+        b = lt_k + phi_c_k * (w_k * inst.wnode * Cp + pdt_next)
+        V = phi_e_k.shape[0]
+        pdt_k = jnp.linalg.solve(jnp.eye(V, dtype=b.dtype) - phi_e_k, b)
+        pdt_k = jnp.maximum(pdt_k, 0.0)
+        return pdt_k, pdt_k
+
+    zero = jnp.zeros(inst.V, dtype=phi_e_a.dtype)
+    _, pdt_a = jax.lax.scan(
+        step, zero, (phi_e_a, phi_c_a, link_term, w_a), reverse=True
+    )
+    return pdt_a
+
+
+def marginals(
+    inst: Instance,
+    phi: Phi,
+    fl: Flows | None = None,
+    fact: Optional[ops.BatchedLU] = None,
+    *,
+    solver: str = "auto",
+) -> Marginals:
     """All marginal quantities for strategy phi."""
     if fl is None:
-        fl = flows(inst, phi)
+        fl = flows(inst, phi, fact, solver=solver)
     Dp = link_marginals(inst, fl.F)
     Cp = comp_marginals(inst, fl.G)
-    pdt = pdt_recursion(inst, phi, Dp, Cp)
+    pdt = pdt_recursion(inst, phi, Dp, Cp, fact, solver=solver)
 
     # delta_ij (7), j != 0
     delta_e = inst.L[:, :, None, None] * Dp[None, None] + pdt[:, :, None, :]

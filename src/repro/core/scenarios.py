@@ -209,11 +209,30 @@ def run_sweep(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
               **gp_kwargs) -> SweepResult:
     """Expand a sweep and solve it batched.
 
+    ``name_or_scenarios`` is a registry name (``"fig5"``,
+    ``"fig6-congestion"``, ``"fig7-packetsize"``, ``"seed-ensemble"``,
+    ``"mixed-topology"`` — expanded with ``sweep_kwargs``) or an explicit
+    ``list[Scenario]``; remaining kwargs go to ``gp.solve_batched``.
+    Returns a :class:`SweepResult` whose ``results`` align 1:1 with
+    ``scenarios`` (trimmed GPResults, phi un-padded back to each member's
+    true (A, K1, V, V)).
+
     Members are grouped by cost family (static metadata, must match within a
     batch) AND by node-count size class (next power of two): padding a
     V=11 Abilene member to a V=100 small-world envelope would multiply its
     per-iteration work ~80x, wiping out the batching win, so differently
     sized members go into separate device programs instead.
+
+    Example::
+
+        >>> sweep = scenarios.run_sweep(
+        ...     "seed-ensemble",
+        ...     sweep_kwargs={"scenario": "abilene", "n_seeds": 32},
+        ...     alpha=0.1, max_iters=250)
+        >>> len(sweep.results), sweep.n_batches
+        (32, 1)
+        >>> sweep.by_label()["abilene#s0"].final_cost  # doctest: +SKIP
+        15.19
     """
     if isinstance(name_or_scenarios, str):
         scenarios = expand(name_or_scenarios, **(sweep_kwargs or {}))

@@ -11,17 +11,26 @@ Given a forwarding/offloading strategy ``phi`` the stage traffics
 linear solve; the chain coupling is a ``lax.scan`` over k, and applications
 are vmapped.  This is the synchronous, vectorized equivalent of the paper's
 per-packet flow propagation.
+
+The default solver path batches all (app, stage) factorizations into ONE
+``(A*K1, V, V)`` LU (``stage_factors`` -> ``kernels.ops.batched_factor``),
+leaving only O(V^2) triangular solves inside the chain scan.  The same
+factors serve the marginal recursion (``core/marginals.py``) because its
+matrix ``I - Phi_k`` is this one un-transposed — one factorization per GP
+step covers both sweeps (DESIGN.md §12).  ``solver="dense"`` keeps the
+seed's per-stage ``jnp.linalg.solve`` as the differential reference.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.network import Instance
+from repro.kernels import ops
 
 
 class Phi(NamedTuple):
@@ -50,16 +59,78 @@ def _solve_stage(phi_e_k: jnp.ndarray, inject: jnp.ndarray) -> jnp.ndarray:
     return jnp.linalg.solve(mat, inject)
 
 
-def stage_traffic(inst: Instance, phi: Phi) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Compute t (A,K1,V) and g (A,K1,V) by scanning the chain."""
+# Below this node count the CPU fallback's batched factor+substitution is
+# dispatch-bound and loses to the per-stage dense solve (measured: V=22
+# dense wins ~3x; V=100 batched wins ~1.4x on 2-core CPU); on TPU the
+# Pallas kernel path is always preferred.  DESIGN.md §12.
+AUTO_MIN_V = 64
+
+
+def resolve_solver(solver: str, V: int) -> str:
+    """Resolve the "auto" stage-solver policy to a concrete method.
+
+    V is a static (shape-derived) quantity, so the choice is made at trace
+    time and each jitted program contains exactly one solver path.
+    """
+    if solver != "auto":
+        return solver
+    return "batched_lu" if (not ops.INTERPRET or V >= AUTO_MIN_V) else "dense"
+
+
+def stage_factors(phi_e: jnp.ndarray) -> ops.BatchedLU:
+    """Batched LU of every stage system ``I - Phi_k`` in one device call.
+
+    phi_e (A, K1, V, V) -> BatchedLU with leading dims (A, K1).  The factors
+    serve BOTH linear sweeps of a GP iteration: the traffic fixed point
+    solves the transposed system (``trans=1``) and the marginal recursion
+    the plain one (``trans=0``), so ``gp.gp_step`` factors once and shares
+    (DESIGN.md §12).  Per-member condition flags live in ``.ok``; singular
+    members (loopy candidates) yield non-finite solves that
+    ``traffic_is_valid`` rejects, exactly like the dense path.
+    """
+    V = phi_e.shape[-1]
+    mats = jnp.eye(V, dtype=phi_e.dtype) - phi_e
+    return ops.batched_factor(mats)
+
+
+def stage_traffic(
+    inst: Instance,
+    phi: Phi,
+    fact: Optional[ops.BatchedLU] = None,
+    *,
+    solver: str = "auto",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute t (A,K1,V) and g (A,K1,V) by scanning the chain.
+
+    solver="batched_lu" consumes ``fact`` (or factors all stages in one
+    batched LU) and runs O(V^2) triangular solves per scan step;
+    solver="dense" is the seed's per-stage ``jnp.linalg.solve`` reference;
+    solver="auto" (default) picks per backend/size (``resolve_solver``).
+    """
+    solver = resolve_solver(solver, phi.e.shape[-1])
+    if solver == "batched_lu":
+        if fact is None:
+            fact = stage_factors(phi.e)
+
+        def per_app_lu(fact_a, phi_c_a, r_a):
+            def step(inject, xs):
+                # NOTE: no clamping here — the map phi -> t must stay
+                # exactly linear so closed-form marginals (3)-(4) match
+                # autodiff and finite differences (tests/test_marginals.py).
+                # Divergent solutions from loopy candidate strategies are
+                # rejected by ``traffic_is_valid`` instead.
+                fact_k, phi_c_k = xs
+                t_k = ops.batched_solve_factored(fact_k, inject, trans=1)
+                g_k = t_k * phi_c_k
+                return g_k, (t_k, g_k)
+
+            _, (t_a, g_a) = jax.lax.scan(step, r_a, (fact_a, phi_c_a))
+            return t_a, g_a
+
+        return jax.vmap(per_app_lu)(fact, phi.c, inst.r)
 
     def per_app(phi_e_a, phi_c_a, r_a):
         def step(inject, xs):
-            # NOTE: no clamping here — the map phi -> t must stay exactly
-            # linear so closed-form marginals (3)-(4) match autodiff and
-            # finite differences (tests/test_marginals.py).  Divergent
-            # solutions from loopy candidate strategies are rejected by
-            # ``traffic_is_valid`` instead.
             phi_e_k, phi_c_k = xs
             t_k = _solve_stage(phi_e_k, inject)
             g_k = t_k * phi_c_k
@@ -71,9 +142,15 @@ def stage_traffic(inst: Instance, phi: Phi) -> tuple[jnp.ndarray, jnp.ndarray]:
     return jax.vmap(per_app)(phi.e, phi.c, inst.r)
 
 
-def flows(inst: Instance, phi: Phi) -> Flows:
+def flows(
+    inst: Instance,
+    phi: Phi,
+    fact: Optional[ops.BatchedLU] = None,
+    *,
+    solver: str = "auto",
+) -> Flows:
     """All flow quantities induced by strategy phi (Table I)."""
-    t, g = stage_traffic(inst, phi)
+    t, g = stage_traffic(inst, phi, fact, solver=solver)
     f = t[..., None] * phi.e                                  # (A,K1,V,V)
     F = jnp.einsum("ak,akij->ij", inst.L, f)
     G = jnp.einsum("ak,aki->i", inst.w, g) * inst.wnode

@@ -1,0 +1,355 @@
+"""Blocked batched-LU Pallas kernel for the GP hot loop's stage systems.
+
+Every GP iteration solves O(ladder x apps x stages) small dense systems
+
+    (I - Phi_k)   pdt = b      (marginal recursion (4), row form)
+    (I - Phi_k)^T t   = inject (traffic fixed point, Section II)
+
+whose matrices differ only by a transpose.  This module provides the batched
+factorization + triangular-solve pair that turns that pile of tiny solves
+into ONE ``(B, V, V)`` device program:
+
+  * :func:`lu_factor` — unpivoted blocked LU, one batch member per grid
+    step.  Loop-free strategies make ``I - Phi`` a nonsingular M-matrix
+    (unit diagonal, row-diagonally dominant), for which LU without pivoting
+    exists and is stable; near-singular members (loopy candidate
+    strategies) produce ~0 pivots whose non-finite quotients are surfaced
+    through per-member ``ok`` flags rather than exceptions — the contract
+    DESIGN.md §2 and §12 rely on to keep divergence detectable under vmap.
+  * :func:`lu_solve` — the companion two-sweep triangular solve, with
+    ``trans=1`` reusing the same factors for the transposed system.
+  * :func:`ref_factor` / :func:`ref_solve` — the ``jax.lax.linalg`` (LAPACK
+    partial-pivoting) reference path; also the CPU dispatch target of
+    ``kernels.ops`` since interpret-mode Pallas cannot beat native LAPACK.
+
+Blocking scheme (§12): the (Vp, Vp) matrix is resident in VMEM; a static
+python loop walks column panels of width ``NB``.  Within a panel, columns
+are eliminated by masked rank-1 updates (VPU); the panel's trailing block
+row is recovered by a Neumann sweep of the nilpotent strictly-lower panel
+(``U12 = A12 - L11s @ U12`` iterated NB times, MXU matmuls); the trailing
+submatrix update ``A22 -= L21 @ U12`` is a single MXU matmul — the O(V^3)
+bulk of the factorization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128       # lane-dim alignment on real TPU
+SUBLANE = 8      # cheaper alignment used under interpret mode (tests/CPU)
+DEFAULT_NB = 32  # column-panel width of the blocked factorization
+
+# |U_ii| below this is treated as a structurally singular member.
+PIVOT_TINY = 1e-30
+
+
+# ---------------------------------------------------------------------------
+# Reference path (jax.lax.linalg factorization + block substitution)
+# ---------------------------------------------------------------------------
+#
+# The factorization is LAPACK's batched partial-pivoting getrf
+# (``jax.lax.linalg.lu``).  The SOLVE phase deliberately avoids XLA's
+# ``triangular_solve``: on CPU its batched lowering is orders of magnitude
+# slower than the O(B V^2) flop count (measured ~50ms for 90 single-rhs
+# V=100 solves).  Instead, factor time precomputes the inverses of the
+# nb x nb diagonal blocks of L and U — a log-depth Neumann product over
+# ONE (B * nblk, nb, nb) matmul stack, valid because the strict triangle
+# of a triangular block is nilpotent — and each solve is then a short
+# static chain of batched matvecs (one per block row), which XLA:CPU maps
+# to well-optimized batched GEMV.  This is the same blocking scheme the
+# Pallas kernel uses on TPU, expressed at the XLA level (DESIGN.md §12).
+
+# Substitution block width.  The diag-block inverse prework costs
+# O(log(nb) * V * nb^2) flops per member and the solve sweeps O(V/nb)
+# dispatches — nb=16 balances the two on CPU (nb=32 triples factor-time
+# flops for one fewer solve dispatch per sweep).
+REF_NB = 16
+
+
+def _pad_square(a: jnp.ndarray, Vp: int) -> jnp.ndarray:
+    """Pad (B, V, V) to (B, Vp, Vp) with an identity tail block."""
+    V = a.shape[-1]
+    if Vp == V:
+        return a
+    a = jnp.pad(a, ((0, 0), (0, Vp - V), (0, Vp - V)))
+    tail = (jnp.arange(Vp) >= V).astype(a.dtype)
+    return a + jnp.diag(tail)[None]
+
+
+def _diag_blocks(a: jnp.ndarray, nb: int) -> jnp.ndarray:
+    """(B, Vp, Vp) -> (B, nblk, nb, nb) diagonal blocks."""
+    B, Vp, _ = a.shape
+    nblk = Vp // nb
+    d = jnp.diagonal(a.reshape(B, nblk, nb, nblk, nb), axis1=1, axis2=3)
+    return jnp.moveaxis(d, -1, 1)
+
+
+def _nilpotent_inv(X: jnp.ndarray) -> jnp.ndarray:
+    """inv(I - X) for strictly-triangular (nilpotent) X, any leading dims.
+
+    Uses the log-depth product identity sum_{k<2^m} X^k =
+    prod_j (I + X^(2^j)) — ceil(log2 nb) batched matmul rounds instead of
+    nb substitution steps.
+    """
+    nb = X.shape[-1]
+    eye = jnp.eye(nb, dtype=X.dtype)
+    acc = eye + X
+    span = 2
+    while span < nb:
+        X = jnp.einsum("...ij,...jk->...ik", X, X)
+        acc = jnp.einsum("...ij,...jk->...ik", acc, eye + X)
+        span *= 2
+    return acc
+
+
+def block_inverses(lu: jnp.ndarray, nb: int = REF_NB
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Inverses of the diagonal nb-blocks of packed factors.
+
+    lu (B, V, V) -> (linv, uinv), each (B, nblk, nb, nb), where
+    linv[b, i] = inv(L_ii) (unit lower) and uinv[b, i] = inv(U_ii).
+    Padding blocks are identity, so padded solves are exact.
+    """
+    V = lu.shape[-1]
+    Vp = -(-V // nb) * nb
+    lup = _pad_square(lu.astype(jnp.float32), Vp)
+    tri = jnp.tril(jnp.ones((nb, nb), jnp.float32), -1)
+    Lb = _diag_blocks(lup, nb) * tri                     # strict lower
+    linv = _nilpotent_inv(-Lb)
+    Ub = _diag_blocks(lup, nb) * (1.0 - tri)             # upper incl diag
+    d = jnp.diagonal(Ub, axis1=-2, axis2=-1)             # (B, nblk, nb)
+    dinv = 1.0 / d
+    Nu = dinv[..., :, None] * Ub * tri.T                 # row-scaled strict upper
+    uinv = _nilpotent_inv(-Nu) * dinv[..., None, :]
+    return linv, uinv
+
+
+def ref_factor(mats: jnp.ndarray
+               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Batched LAPACK LU + substitution prework.
+
+    mats (B, V, V) -> (lu, perm (B, V) int32 row permutation with
+    ``mats[perm] = L @ U``, linv, uinv).
+    """
+    lu, _, perm = jax.lax.linalg.lu(mats.astype(jnp.float32))
+    linv, uinv = block_inverses(lu)
+    return lu, perm, linv, uinv
+
+
+def _block_subst(mat: jnp.ndarray, dinv: jnp.ndarray, b: jnp.ndarray,
+                 nb: int, *, lower: bool) -> jnp.ndarray:
+    """Solve T x = b for block-triangular T given diag-block inverses.
+
+    mat (B, Vp, Vp) carries T in its lower (or upper) triangle; coupling
+    to already-solved blocks is a masked batched matvec per block row —
+    the intra-block triangle is folded into ``dinv``.
+    """
+    B, Vp = b.shape
+    nblk = Vp // nb
+    cols = jnp.arange(Vp)
+    x = jnp.zeros_like(b)
+    order = range(nblk) if lower else range(nblk - 1, -1, -1)
+    for i in order:
+        sl = slice(i * nb, (i + 1) * nb)
+        panel = mat[:, sl, :]
+        mask = (cols < i * nb) if lower else (cols >= (i + 1) * nb)
+        s = jnp.einsum("brv,bv->br", panel * mask, x)
+        x_i = jnp.einsum("brc,bc->br", dinv[:, i], b[:, sl] - s)
+        x = x.at[:, sl].set(x_i)
+    return x
+
+
+def ref_solve(lu: jnp.ndarray, perm: jnp.ndarray,
+              linv: jnp.ndarray, uinv: jnp.ndarray, rhs: jnp.ndarray,
+              *, trans: int = 0, nb: int = REF_NB) -> jnp.ndarray:
+    """Solve A x = rhs (trans=0) or A^T x = rhs (trans=1) from ref_factor."""
+    B, V = rhs.shape
+    Vp = linv.shape[1] * nb
+    lup = _pad_square(lu.astype(jnp.float32), Vp)
+    b = rhs.astype(jnp.float32)
+    if trans == 0:
+        # A = P^T L U:  L U x = b[perm]
+        bp = jnp.take_along_axis(b, perm.astype(jnp.int32), axis=1)
+        bp = jnp.pad(bp, ((0, 0), (0, Vp - V)))
+        y = _block_subst(lup, linv, bp, nb, lower=True)
+        x = _block_subst(lup, uinv, y, nb, lower=False)
+        return x[:, :V]
+    # A^T = U^T L^T P:  solve U^T y = b, L^T z = y, then undo the row perm
+    lupT = lup.transpose(0, 2, 1)
+    uinvT = uinv.transpose(0, 1, 3, 2)
+    linvT = linv.transpose(0, 1, 3, 2)
+    bp = jnp.pad(b, ((0, 0), (0, Vp - V)))
+    y = _block_subst(lupT, uinvT, bp, nb, lower=True)
+    z = _block_subst(lupT, linvT, y, nb, lower=False)[:, :V]
+    inv_perm = jnp.argsort(perm, axis=1)
+    return jnp.take_along_axis(z, inv_perm, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+def _pad_dim(V: int, interpret: bool) -> int:
+    mult = SUBLANE if interpret else LANE
+    return -(-V // mult) * mult
+
+
+def _lu_kernel(a_ref, lu_ref, *, nb: int):
+    """Unpivoted blocked LU of one (Vp, Vp) matrix, in-register."""
+    a = a_ref[0].astype(jnp.float32)
+    Vp = a.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (Vp, Vp), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Vp, Vp), 1)
+    vidx = jax.lax.broadcasted_iota(jnp.int32, (Vp,), 0)
+
+    for p0 in range(0, Vp, nb):
+        p1 = min(p0 + nb, Vp)
+
+        def col_step(k, a):
+            # Masked rank-1 elimination of column k, update restricted to
+            # the panel's columns (the trailing block is updated once per
+            # panel by the MXU matmul below).
+            piv = jnp.sum(jnp.where((row == k) & (col == k), a, 0.0))
+            colk = jnp.sum(jnp.where(col == k, a, 0.0), axis=1)      # (Vp,)
+            l = jnp.where(vidx > k, colk / piv, 0.0)
+            rowk = jnp.sum(jnp.where(row == k, a, 0.0), axis=0)      # (Vp,)
+            u = jnp.where((vidx > k) & (vidx < p1), rowk, 0.0)
+            a = a - l[:, None] * u[None, :]
+            # store the multipliers below the diagonal of column k
+            return jnp.where((col == k) & (row > k), l[:, None], a)
+
+        a = jax.lax.fori_loop(p0, p1, col_step, a)
+
+        if p1 < Vp:
+            nb_p = p1 - p0
+            L11 = a[p0:p1, p0:p1]
+            rloc = jax.lax.broadcasted_iota(jnp.int32, (nb_p, nb_p), 0)
+            cloc = jax.lax.broadcasted_iota(jnp.int32, (nb_p, nb_p), 1)
+            L11s = jnp.where(rloc > cloc, L11, 0.0)   # strictly lower, nilpotent
+            A12 = a[p0:p1, p1:]
+            # U12 = (I + L11s)^{-1} A12 via the finite Neumann fixed point
+            # (exact after nb_p sweeps since L11s^nb_p = 0) — MXU matmuls.
+            U12 = A12
+            for _ in range(nb_p):
+                U12 = A12 - jax.lax.dot(L11s, U12)
+            L21 = a[p1:, p0:p1]
+            a = a.at[p0:p1, p1:].set(U12)
+            a = a.at[p1:, p1:].add(-jax.lax.dot(L21, U12))
+
+    lu_ref[0, ...] = a.astype(lu_ref.dtype)
+
+
+def _solve_kernel(lu_ref, b_ref, x_ref, *, trans: int):
+    """Two-sweep substitution for one packed-LU system.
+
+    trans=0 solves L U x = b; trans=1 solves (L U)^T x = b, i.e. first the
+    lower-triangular U^T then the unit-upper L^T — both become row sweeps of
+    the transposed packed factor, so one upfront transpose unifies the code.
+    """
+    lu = lu_ref[0].astype(jnp.float32)
+    b = b_ref[0, 0].astype(jnp.float32)                          # (Vp,)
+    Vp = lu.shape[0]
+    luw = lu.T if trans else lu
+    vidx = jax.lax.broadcasted_iota(jnp.int32, (Vp,), 0)
+
+    def row_of(m, i):
+        return jax.lax.dynamic_slice(m, (i, 0), (1, Vp))[0]
+
+    def diag_of(m, i):
+        return jnp.sum(jnp.where(vidx == i, row_of(m, i), 0.0))
+
+    # forward sweep: unit-lower L (trans=0) / lower-with-diag U^T (trans=1)
+    def fwd(i, y):
+        s = jnp.sum(jnp.where(vidx < i, row_of(luw, i), 0.0) * y)
+        d = diag_of(luw, i) if trans else 1.0
+        return jnp.where(vidx == i, (y - s) / d, y)
+
+    y = jax.lax.fori_loop(0, Vp, fwd, b)
+
+    # backward sweep: upper-with-diag U (trans=0) / unit-upper L^T (trans=1)
+    def bwd(j, x):
+        i = Vp - 1 - j
+        s = jnp.sum(jnp.where(vidx > i, row_of(luw, i), 0.0) * x)
+        d = 1.0 if trans else diag_of(luw, i)
+        return jnp.where(vidx == i, (x - s) / d, x)
+
+    x = jax.lax.fori_loop(0, Vp, bwd, y)
+    x_ref[0, 0, ...] = x.astype(x_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Wrappers (padding + pallas_call plumbing)
+# ---------------------------------------------------------------------------
+
+def lu_factor(mats: jnp.ndarray, *, nb: int = DEFAULT_NB,
+              interpret: bool = False) -> jnp.ndarray:
+    """Unpivoted blocked LU of a (B, V, V) batch -> packed (B, V, V) factors.
+
+    The pad region is an identity block, whose LU is itself, so padding and
+    slicing commute with the factorization.
+    """
+    B, V, _ = mats.shape
+    Vp = _pad_dim(V, interpret)
+    a = _pad_square(mats.astype(jnp.float32), Vp)
+
+    out = pl.pallas_call(
+        functools.partial(_lu_kernel, nb=min(nb, Vp)),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, Vp, Vp), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, Vp, Vp), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Vp, Vp), jnp.float32),
+        interpret=interpret,
+    )(a)
+    return out[:, :V, :V]
+
+
+def lu_solve(lu: jnp.ndarray, rhs: jnp.ndarray, *, trans: int = 0,
+             interpret: bool = False) -> jnp.ndarray:
+    """Solve packed-LU systems: lu (B, V, V), rhs (B, V) -> (B, V)."""
+    B, V, _ = lu.shape
+    Vp = _pad_dim(V, interpret)
+    a = _pad_square(lu.astype(jnp.float32), Vp)
+    b = jnp.pad(rhs.astype(jnp.float32), ((0, 0), (0, Vp - V)))
+
+    out = pl.pallas_call(
+        functools.partial(_solve_kernel, trans=trans),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Vp, Vp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, Vp), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Vp), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1, Vp), jnp.float32),
+        interpret=interpret,
+    )(a, b[:, None, :])
+    return out[:, 0, :V]
+
+
+def factor_ok(lu: jnp.ndarray) -> jnp.ndarray:
+    """(B,) bool condition flags from packed factors (either pivot scheme).
+
+    A member is flagged not-ok when its factors contain non-finite entries
+    or a ~zero U pivot — the batched analogue of LAPACK's ``info`` return,
+    evaluated without host sync so flagged members cannot poison the batch
+    (their lanes simply carry inf/nan forward to ``traffic_is_valid``).
+    """
+    diag = jnp.diagonal(lu, axis1=-2, axis2=-1)
+    finite = jnp.all(jnp.isfinite(lu), axis=(-2, -1))
+    return finite & (jnp.min(jnp.abs(diag), axis=-1) > PIVOT_TINY)
+
+
+def residuals(mats: jnp.ndarray, x: jnp.ndarray, rhs: jnp.ndarray,
+              *, trans: int = 0) -> jnp.ndarray:
+    """(B,) relative residuals ``|A x - b|_inf / (|b|_inf + 1)``.
+
+    Non-finite solutions report ``inf`` — the per-member divergence signal
+    the GP loop consumes instead of per-solve exceptions (DESIGN.md §12).
+    """
+    op = jnp.einsum("bji,bj->bi" if trans else "bij,bj->bi",
+                    mats.astype(jnp.float32), x.astype(jnp.float32))
+    r = jnp.max(jnp.abs(op - rhs), axis=-1) / (jnp.max(jnp.abs(rhs), axis=-1) + 1.0)
+    return jnp.where(jnp.isfinite(r), r, jnp.inf)

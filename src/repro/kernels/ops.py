@@ -8,10 +8,12 @@ from the backend.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import batched_solve as _bs
 from repro.kernels import chain_propagate as _cp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ssd_chunk as _sc
@@ -57,3 +59,133 @@ def solve_fixed_point(M, src, *, sweeps: int):
 def ssd_chunk(xh, dt, dtA, cum, BH, CH):
     """Adapter matching models.ssm.ssd_chunked's kernel call signature."""
     return _sc.ssd_chunk_fwd(xh, dt, cum, BH, CH, interpret=INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# Batched LU solve (the GP stage-system hot path — DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# Dispatch: on TPU the blocked Pallas kernels compile to Mosaic; on CPU the
+# "interpret-mode fallback" is engaged only when explicitly requested
+# (``use_pallas=True`` — tests and kernel parity sweeps), because the
+# default CPU path should hit native batched LAPACK (``jax.lax.linalg.lu``)
+# rather than the Pallas interpreter.  Both paths share the packed-LU
+# (B, V, V) layout and the per-member ``ok`` flag contract.
+
+class BatchedLU(NamedTuple):
+    """Packed LU factors of a batch of stage systems.
+
+    lu:   (..., V, V) packed L\\U (unit diagonal of L implicit)
+    perm: (..., V) int32 row permutation (``mats[perm] = L @ U``; identity
+          for the Pallas path, which factors without pivoting — valid for
+          the M-matrices ``I - Phi`` of loop-free strategies)
+    linv: (..., nblk, nb, nb) inverses of L's diagonal blocks
+    uinv: (..., nblk, nb, nb) inverses of U's diagonal blocks (the
+          substitution prework of the reference path — DESIGN.md §12)
+    ok:   (...,) bool per-member condition flag (False: singular /
+          non-finite factor — the member's solves will carry inf/nan)
+    """
+
+    lu: jnp.ndarray
+    perm: jnp.ndarray
+    linv: jnp.ndarray
+    uinv: jnp.ndarray
+    ok: jnp.ndarray
+
+
+# The batched-LU kernels are written for Mosaic (TPU): VMEM-resident
+# arbitrary-size blocks, fori_loop row slicing.  On GPU the reference path
+# (cuBLAS/cuSOLVER batched LU via lax.linalg) is both safe and fast, so
+# Pallas engages by default only on TPU; interpret mode is for tests.
+_PALLAS_DEFAULT = jax.default_backend() == "tpu"
+
+
+def _use_pallas(use_pallas: Optional[bool]) -> bool:
+    return _PALLAS_DEFAULT if use_pallas is None else use_pallas
+
+
+def _flatten_batch(x, core_ndim):
+    lead = x.shape[: x.ndim - core_ndim]
+    flat = x.reshape((-1,) + x.shape[x.ndim - core_ndim:])
+    return flat, lead
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def batched_factor(mats: jnp.ndarray, *, use_pallas: Optional[bool] = None
+                   ) -> BatchedLU:
+    """Factor a batch of dense systems: mats (..., V, V) -> BatchedLU.
+
+    Any number of leading batch dims is accepted (they are flattened into
+    the kernel grid and restored on return); composes with jax.vmap/scan.
+    """
+    flat, lead = _flatten_batch(mats, 2)
+    V = flat.shape[-1]
+    if _use_pallas(use_pallas):
+        lu = _bs.lu_factor(flat, interpret=INTERPRET)
+        perm = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32),
+                                flat.shape[:1] + (V,))
+        linv, uinv = _bs.block_inverses(lu)
+    else:
+        lu, perm, linv, uinv = _bs.ref_factor(flat)
+    ok = _bs.factor_ok(lu)
+    return BatchedLU(
+        lu=lu.reshape(lead + (V, V)),
+        perm=perm.reshape(lead + (V,)),
+        linv=linv.reshape(lead + linv.shape[1:]),
+        uinv=uinv.reshape(lead + uinv.shape[1:]),
+        ok=ok.reshape(lead),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("trans", "use_pallas"))
+def batched_solve_factored(fact: BatchedLU, rhs: jnp.ndarray, *,
+                           trans: int = 0,
+                           use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Solve A x = rhs (trans=0) or A^T x = rhs (trans=1) from factors.
+
+    fact.lu (..., V, V), rhs (..., V) -> (..., V).  O(V^2) per member —
+    the factorization cost is paid once per GP step, not once per stage
+    sweep (core/traffic.py, core/marginals.py).
+    """
+    lu_flat, lead = _flatten_batch(fact.lu, 2)
+    rhs_flat, _ = _flatten_batch(rhs, 1)
+    if _use_pallas(use_pallas):
+        # Honor the row permutation even for kernel solves, so factors are
+        # path-portable: Pallas factors carry an identity perm (no-op
+        # gather), while reference (LAPACK-pivoted) factors solve
+        # correctly here too.
+        perm_flat, _ = _flatten_batch(fact.perm.astype(jnp.int32), 1)
+        if trans == 0:
+            rhs_flat = jnp.take_along_axis(rhs_flat, perm_flat, axis=1)
+        x = _bs.lu_solve(lu_flat, rhs_flat, trans=trans, interpret=INTERPRET)
+        if trans != 0:
+            inv_perm = jnp.argsort(perm_flat, axis=1)
+            x = jnp.take_along_axis(x, inv_perm, axis=1)
+    else:
+        perm_flat, _ = _flatten_batch(fact.perm, 1)
+        linv_flat, _ = _flatten_batch(fact.linv, 3)
+        uinv_flat, _ = _flatten_batch(fact.uinv, 3)
+        x = _bs.ref_solve(lu_flat, perm_flat, linv_flat, uinv_flat,
+                          rhs_flat, trans=trans)
+    return x.reshape(rhs.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("trans", "use_pallas"))
+def batched_solve(mats: jnp.ndarray, rhs: jnp.ndarray, *, trans: int = 0,
+                  use_pallas: Optional[bool] = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One-shot factor + solve with per-member residual flags.
+
+    Returns (x (..., V), resid (...,)) where resid is the relative
+    residual ``|A x - b|_inf / (|b|_inf + 1)`` (inf for non-finite
+    members).  A singular member flags itself without poisoning the rest
+    of the batch — the contract the GP loop's loopy-candidate rejection
+    relies on (DESIGN.md §2, §12).
+    """
+    fact = batched_factor(mats, use_pallas=use_pallas)
+    x = batched_solve_factored(fact, rhs, trans=trans, use_pallas=use_pallas)
+    mats_flat, lead = _flatten_batch(mats, 2)
+    x_flat, _ = _flatten_batch(x, 1)
+    rhs_flat, _ = _flatten_batch(rhs, 1)
+    resid = _bs.residuals(mats_flat, x_flat, rhs_flat, trans=trans)
+    return x, resid.reshape(lead)

@@ -12,6 +12,10 @@ from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
+# Kernel shape/dtype sweeps dominate suite wall clock; CI runs them in the
+# slow tier (see README "Test tiers").
+pytestmark = pytest.mark.slow
+
 
 def _mk_qkv(key, B, S, H, KV, hd, dtype):
     ks = jax.random.split(key, 3)

@@ -12,6 +12,10 @@ from repro import configs
 from repro.models import mla, moe, ssm
 from repro.models.transformer import make_model
 
+# Per-architecture behaviour sweeps compile hundreds of programs; CI runs
+# them in the slow tier (see README "Test tiers").
+pytestmark = pytest.mark.slow
+
 
 def _ample_capacity(cfg):
     if cfg.moe is None:
