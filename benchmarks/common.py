@@ -8,8 +8,47 @@ import time
 
 import numpy as np
 
-RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                           "results")
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join(_REPO_ROOT, "results")
+
+# Machine-readable perf trajectory: every benchmark driver appends rows here
+# so future PRs can diff against the committed numbers and catch regressions.
+BENCH_PATH = os.path.join(_REPO_ROOT, "BENCH_gp.json")
+
+
+def bench_record(bench: str, *, scenario: str, V: int, solver: str,
+                 seconds: float, iters: int | None = None, **extra) -> dict:
+    """Append one perf row to the top-level ``BENCH_gp.json``.
+
+    Rows are keyed by (bench, scenario, V, solver): re-running a driver
+    replaces its previous rows instead of growing the file, so the
+    committed trajectory stays one row per measurement point.
+
+    ``seconds`` is wall clock for the measured unit; when ``iters`` (total
+    committed GP iterations) is given a derived ``s_per_iter`` is stored.
+    Extra keyword fields (e.g. ``speedup``, ``n``) are stored verbatim.
+    """
+    row = {"bench": bench, "scenario": scenario, "V": int(V),
+           "solver": solver, "seconds": round(float(seconds), 6)}
+    if iters is not None:
+        row["iters"] = int(iters)
+        row["s_per_iter"] = round(float(seconds) / max(int(iters), 1), 8)
+    row.update(extra)
+    rows = []
+    if os.path.exists(BENCH_PATH):
+        try:
+            with open(BENCH_PATH) as f:
+                rows = json.load(f)["rows"]
+        except (json.JSONDecodeError, KeyError):
+            rows = []
+    key = (row["bench"], row["scenario"], row["V"], row["solver"])
+    rows = [r for r in rows
+            if (r.get("bench"), r.get("scenario"), r.get("V"),
+                r.get("solver")) != key]
+    rows.append(row)
+    with open(BENCH_PATH, "w") as f:
+        json.dump({"rows": rows}, f, indent=1)
+    return row
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

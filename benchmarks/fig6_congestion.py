@@ -4,33 +4,48 @@ Paper claim: GP's advantage grows quickly as the network becomes more
 congested (the congestion-oblivious baselines blow up first).
 
 The whole rate sweep is one batched scenario family — six Abilene
-instances differing only in ``rate_scale`` solved in a single vmapped
-device program; the baselines stay serial (per-instance direction masks).
+instances differing only in ``rate_scale`` — and now the iterative
+baselines batch too: SPOC and LCOF run the same six-member family through
+``scenarios.run_sweep(masks_fn=...)`` (their direction masks are pure jax,
+vmapped over the padded batch), with a serial reference per solver for the
+batched-vs-serial speedup report.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit, result_row, save_json, speedup_report
+from benchmarks.common import (
+    bench_record, emit, result_row, save_json, speedup_report,
+)
 from repro.core import baselines, scenarios
 
 SCALES = scenarios.FIG6_SCALES
 
+SOLVERS = (("GP", None), *baselines.BASELINE_MASKS.items())
+
 
 def main() -> dict:
     kw = dict(alpha=0.1, max_iters=300)
-    cold = scenarios.run_sweep("fig6-congestion", **kw)       # compiles
-    sweep = scenarios.run_sweep("fig6-congestion", **kw)      # warm timing
-    serial = scenarios.run_sweep_serial("fig6-congestion", **kw)
+    sweeps, serials = {}, {}
+    for solver, masks_fn in SOLVERS:
+        # warm BOTH paths before timing (all six members share one shape,
+        # but each solver's mask signature compiles its own programs)
+        scenarios.run_sweep("fig6-congestion", masks_fn=masks_fn, **kw)
+        scenarios.run_sweep_serial("fig6-congestion", masks_fn=masks_fn, **kw)
+        sweeps[solver] = scenarios.run_sweep(
+            "fig6-congestion", masks_fn=masks_fn, **kw)
+        serials[solver] = scenarios.run_sweep_serial(
+            "fig6-congestion", masks_fn=masks_fn, **kw)
 
+    sweep = sweeps["GP"]
     curve = {}
-    for sc, res in zip(sweep.scenarios, sweep.results):
+    for i, sc in enumerate(sweep.scenarios):
         s = sc.meta["rate_scale"]
         row = {
-            "GP": res.final_cost,
-            "SPOC": baselines.spoc(sc.instance, alpha=0.1, max_iters=200).final_cost,
-            "LCOF": baselines.lcof(sc.instance, alpha=0.1, max_iters=200).final_cost,
+            "GP": sweep.results[i].final_cost,
+            "SPOC": sweeps["SPOC"].results[i].final_cost,
+            "LCOF": sweeps["LCOF"].results[i].final_cost,
             "LPR-SC": baselines.lpr_sc(sc.instance).final_cost,
-            "gp": result_row(res),    # convergence history for the figure
+            "gp": result_row(sweep.results[i]),  # convergence history
         }
         curve[s] = row
         emit(f"fig6_rate{s}", sweep.seconds * 1e6 / len(SCALES),
@@ -40,15 +55,35 @@ def main() -> dict:
     ratios = [min(r["SPOC"], r["LCOF"], r["LPR-SC"]) / max(r["GP"], 1e-9)
               for r in curve.values()]
     grows = ratios[-1] > ratios[0]
+
+    speedups = {}
+    for solver, _ in SOLVERS:
+        bat, ser = sweeps[solver], serials[solver]
+        rel = max(
+            abs(b.final_cost - s.final_cost) / max(abs(s.final_cost), 1e-9)
+            for b, s in zip(bat.results, ser.results))
+        speedups[solver] = {
+            "batched_seconds": bat.seconds, "serial_seconds": ser.seconds,
+            "speedup": ser.seconds / max(bat.seconds, 1e-9),
+            "max_rel_cost_err": rel,
+        }
+        bench_record("fig6", scenario="abilene-rates", V=11,
+                     solver=f"{solver}-batched", seconds=bat.seconds,
+                     iters=sum(int(r.iterations) for r in bat.results),
+                     n=len(SCALES),
+                     speedup=round(speedups[solver]["speedup"], 3))
+        bench_record("fig6", scenario="abilene-rates", V=11,
+                     solver=f"{solver}-serial", seconds=ser.seconds,
+                     iters=sum(int(r.iterations) for r in ser.results),
+                     n=len(SCALES))
+        emit(f"fig6_{solver.lower()}_speedup", bat.seconds * 1e6,
+             speedup_report(ser.seconds, bat.seconds, len(SCALES)))
+
     save_json("fig6.json", {"curve": curve, "advantage_ratios": ratios,
                             "advantage_grows_with_congestion": grows,
-                            "gp_batched_seconds_warm": sweep.seconds,
-                            "gp_batched_seconds_cold": cold.seconds,
-                            "gp_serial_seconds": serial.seconds})
+                            "solver_speedups": speedups})
     emit("fig6_summary", 0.0,
          "ratios=" + "|".join(f"{r:.2f}" for r in ratios) + f" grows={grows}")
-    emit("fig6_gp_speedup", sweep.seconds * 1e6,
-         speedup_report(serial.seconds, sweep.seconds, len(SCALES)))
     return curve
 
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, save_json, speedup_report
+from benchmarks.common import bench_record, emit, save_json, speedup_report
 from repro.core import scenarios, traffic
 
 L0_VALUES = scenarios.FIG7_L0
@@ -33,6 +33,7 @@ def hop_counts(inst, phi) -> tuple[float, float]:
 def main() -> dict:
     kw = dict(alpha=0.1, max_iters=300)
     cold = scenarios.run_sweep("fig7-packetsize", **kw)       # compiles
+    scenarios.run_sweep_serial("fig7-packetsize", **kw)       # warm serial too
     sweep = scenarios.run_sweep("fig7-packetsize", **kw)      # warm timing
     serial = scenarios.run_sweep_serial("fig7-packetsize", **kw)
 
@@ -53,6 +54,11 @@ def main() -> dict:
          "data_hops=" + "|".join(f"{d:.2f}" for d in dhs) + f" shrink={monotone_trend}")
     emit("fig7_gp_speedup", sweep.seconds * 1e6,
          speedup_report(serial.seconds, sweep.seconds, len(L0_VALUES)))
+    for solver, sw, it in (("GP-batched", sweep, sweep.results),
+                           ("GP-serial", serial, serial.results)):
+        bench_record("fig7", scenario="abilene-L0", V=11, solver=solver,
+                     seconds=sw.seconds, n=len(L0_VALUES),
+                     iters=sum(int(r.iterations) for r in it))
     return out
 
 

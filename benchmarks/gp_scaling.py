@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Timer, emit, save_json, speedup_report
+from benchmarks.common import Timer, bench_record, emit, save_json, speedup_report
 from repro.core import batch, compat, distributed, gp, network, scenarios
 
 
@@ -64,6 +64,11 @@ def main():
         emit(f"gp_iter_solver_{name}", us_lu,
              f"V:{inst.V}|dense:{us_dense:.0f}us|"
              f"speedup:{us_dense / max(us_lu, 1e-9):.2f}x")
+        bench_record("gp_scaling", scenario=name, V=inst.V,
+                     solver="batched_lu", seconds=us_lu / 1e6, iters=1,
+                     speedup=round(us_dense / max(us_lu, 1e-9), 3))
+        bench_record("gp_scaling", scenario=name, V=inst.V,
+                     solver="dense", seconds=us_dense / 1e6, iters=1)
     rows["stage_solver"] = solver_rows
 
     # batched engine: per-member iteration cost vs batch size (the

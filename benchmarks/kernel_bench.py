@@ -1,12 +1,18 @@
 """Kernel microbenchmarks (interpret mode on CPU; structural numbers —
-real-TPU wall times come from the roofline, not from this host)."""
+real-TPU wall times come from the roofline, not from this host).
+
+``--smoke`` runs only the GP-hot-path kernels (blocked-sets + batched-LU)
+at V=20 and records rows to BENCH_gp.json — the CI ``bench-smoke`` job.
+"""
 
 from __future__ import annotations
+
+import sys
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Timer, emit
+from benchmarks.common import Timer, bench_record, emit
 from repro.kernels import ops, ref
 
 
@@ -34,6 +40,51 @@ def _stage_systems(V: int):
     return jnp.eye(V) - P, rhs, "synthetic"
 
 
+def _blocked_inputs(V: int):
+    """route/improper matrices from a congested mid-solve GP iterate (where
+    improper links actually appear), plus the instance label."""
+    from repro.core import gp, marginals, network, scenarios
+
+    by_v = {20: "connected-er", 100: "sw-queue"}
+    name = by_v.get(V, "connected-er")
+    inst = network.table_ii_instance(
+        name, seed=0, rate_scale=scenarios.FIG5_RATE[name])
+    res = gp.solve(inst, alpha=0.1, max_iters=8, patience=10**6, tol=0.0)
+    m = marginals.marginals(inst, res.phi)
+    route = res.phi.e > 0.0
+    worse = m.pdt[:, :, None, :] > m.pdt[:, :, :, None] + gp._BLOCK_EPS
+    return route, route & worse, name
+
+
+def bench_blocked_sets(sizes=(20, 100)):
+    """Bit-packed blocked-set kernel vs the seed's dense V-sweep scan.
+
+    Both paths compute the identical tagged-node fixed point (parity is
+    asserted, and tested in tests/test_blocked_sets.py); the bitset path
+    packs successors into uint32 words and early-exits at the routing-DAG
+    diameter (kernels/blocked_sets.py, DESIGN.md §13).
+    """
+    from repro.kernels import blocked_sets as bset
+
+    for V in sizes:
+        route, improper, src = _blocked_inputs(V)
+        f_bit = ops.blocked_tagged          # already jitted at definition
+        f_dense = jax.jit(bset.tagged_scan_dense)
+        t_bit = _time_med(lambda: f_bit(route, improper))
+        t_dense = _time_med(lambda: f_dense(route, improper))
+        exact = bool(jnp.all(f_bit(route, improper) == f_dense(route, improper)))
+        assert exact, f"bitset kernel diverged from dense scan at V={V}"
+        speedup = t_dense / max(t_bit, 1e-9)
+        emit(f"blocked_sets_V{V}", t_bit,
+             f"fig5:{src}|dense_scan:{t_dense:.0f}us|"
+             f"speedup:{speedup:.2f}x|exact:{exact}")
+        bench_record("kernel_bench", scenario=f"blocked_sets:{src}", V=V,
+                     solver="bitset", seconds=t_bit / 1e6,
+                     speedup=round(speedup, 3))
+        bench_record("kernel_bench", scenario=f"blocked_sets:{src}", V=V,
+                     solver="dense-scan", seconds=t_dense / 1e6)
+
+
 def bench_batched_solve():
     """Batched (B,V,V) factor+solve vs the looped per-stage LAPACK baseline.
 
@@ -43,7 +94,11 @@ def bench_batched_solve():
     The derived field also reports the jit-unrolled variant (all B solves
     as separate HLOs inside one program) for reference.
     """
-    for V in (20, 50, 100):
+    bench_batched_solve_sizes((20, 50, 100))
+
+
+def bench_batched_solve_sizes(sizes):
+    for V in sizes:
         mats, rhs, src = _stage_systems(V)
         B = mats.shape[0]
 
@@ -68,6 +123,11 @@ def bench_batched_solve():
              f"B:{B}|{src}|looped_lapack:{t_loop:.0f}us|"
              f"speedup:{t_loop / max(t_bat, 1e-9):.2f}x|"
              f"jit_unrolled:{t_unroll:.0f}us|max_err:{err:.2e}")
+        bench_record("kernel_bench", scenario=f"batched_lu:{src}", V=V,
+                     solver="batched_lu", seconds=t_bat / 1e6,
+                     speedup=round(t_loop / max(t_bat, 1e-9), 3))
+        bench_record("kernel_bench", scenario=f"batched_lu:{src}", V=V,
+                     solver="looped-lapack", seconds=t_loop / 1e6)
 
 
 def bench_gp_solver_parity():
@@ -112,6 +172,12 @@ def _time_med(fn, reps=11):
     return sorted(ts)[len(ts) // 2]
 
 
+def smoke():
+    """CI bench-smoke: GP-hot-path kernels only, V=20, interpret-safe."""
+    bench_blocked_sets(sizes=(20,))
+    bench_batched_solve_sizes((20,))
+
+
 def main():
     # flash attention: kernel (interpret) vs jnp oracle
     B, S, H, KV, hd = 1, 512, 4, 2, 64
@@ -151,8 +217,13 @@ def main():
 
     # batched-LU stage solver: kernel-vs-LAPACK speedup + GP parity
     bench_batched_solve()
+    # blocked-set propagation: bitset kernel vs the dense V-sweep scan
+    bench_blocked_sets()
     bench_gp_solver_parity()
 
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        main()

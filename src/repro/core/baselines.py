@@ -52,8 +52,17 @@ def _sp_next_hop_mask(inst: Instance) -> jnp.ndarray:
     return jax.vmap(per_app)(inst.L, inst.dst)
 
 
-def spoc(inst: Instance, **solve_kwargs) -> gp.GPResult:
-    """Shortest Path Optimal Computation placement."""
+def spoc_masks(inst: Instance) -> tuple[jnp.ndarray, jnp.ndarray, Phi]:
+    """SPOC as a pure direction-mask restriction: (allowed_e, allowed_c,
+    phi0), all plain jax arrays — vmappable over ``batch.pad_instances``
+    pytrees, which is how the batched baseline sweeps are built
+    (``scenarios.run_sweep(..., masks_fn=spoc_masks)``).
+
+    On a padded instance the real (node, app, stage) block is identical to
+    the unpadded computation (dead nodes are unreachable at infinite
+    zero-flow weight, and ``renormalize`` zeroes degenerate rows), so
+    batched SPOC reproduces serial SPOC (tests/test_blocked_sets.py).
+    """
     allowed_e = _sp_next_hop_mask(inst)
     # start from a feasible point inside the restriction: forward everything
     # along the shortest path, never compute...
@@ -66,11 +75,21 @@ def spoc(inst: Instance, **solve_kwargs) -> gp.GPResult:
         inst,
         Phi(e=phi0.e * 0.5, c=jnp.where(inst.cpu_allowed()[:, :, None], 0.5, 0.0)),
     )
-    return gp.solve(inst, phi0, allowed_e=allowed_e, **solve_kwargs)
+    # offloading is unrestricted for SPOC; an all-True mask is identical to
+    # passing allowed_c=None but batches as a plain array
+    allowed_c = jnp.ones((inst.A, inst.K1, inst.V), dtype=bool)
+    return allowed_e, allowed_c, phi0
 
 
-def lcof(inst: Instance, **solve_kwargs) -> gp.GPResult:
-    """Local Computation placement, Optimal Forwarding."""
+def spoc(inst: Instance, **solve_kwargs) -> gp.GPResult:
+    """Shortest Path Optimal Computation placement."""
+    allowed_e, allowed_c, phi0 = spoc_masks(inst)
+    return gp.solve(inst, phi0, allowed_e=allowed_e, allowed_c=allowed_c,
+                    **solve_kwargs)
+
+
+def lcof_masks(inst: Instance) -> tuple[jnp.ndarray, jnp.ndarray, Phi]:
+    """LCOF as a pure direction-mask restriction (see :func:`spoc_masks`)."""
     karr = jnp.arange(inst.K1)[None, :]
     last = karr == inst.n_tasks[:, None]                            # (A,K1)
     allowed_e = jnp.broadcast_to(
@@ -83,7 +102,14 @@ def lcof(inst: Instance, **solve_kwargs) -> gp.GPResult:
     phi_c0 = jnp.where(inst.cpu_allowed()[:, :, None], 1.0, 0.0)
     _, sp_phi = gp.expanded_shortest_path(inst)
     phi0 = renormalize(inst, Phi(e=jnp.where(last[:, :, None, None], sp_phi.e, 0.0), c=phi_c0))
-    return gp.solve(inst, phi0, allowed_e=allowed_e, allowed_c=allowed_c, **solve_kwargs)
+    return allowed_e, allowed_c, phi0
+
+
+def lcof(inst: Instance, **solve_kwargs) -> gp.GPResult:
+    """Local Computation placement, Optimal Forwarding."""
+    allowed_e, allowed_c, phi0 = lcof_masks(inst)
+    return gp.solve(inst, phi0, allowed_e=allowed_e, allowed_c=allowed_c,
+                    **solve_kwargs)
 
 
 def lpr_sc(inst: Instance) -> gp.GPResult:
@@ -95,3 +121,8 @@ def lpr_sc(inst: Instance) -> gp.GPResult:
 
 
 ALL_BASELINES = {"SPOC": spoc, "LCOF": lcof, "LPR-SC": lpr_sc}
+
+# Pure-mask constructors for the batched sweep drivers: each maps an
+# Instance (possibly a padded batch member under jax.vmap) to
+# (allowed_e, allowed_c, phi0) — see scenarios.run_sweep(masks_fn=...).
+BASELINE_MASKS = {"SPOC": spoc_masks, "LCOF": lcof_masks}

@@ -29,6 +29,8 @@ import numpy as np
 from repro.core import batch as batch_mod
 from repro.core import costs
 from repro.core import traffic as traffic_mod
+from repro.kernels import blocked_sets as blocked_sets_mod
+from repro.kernels import ops
 from repro.core.marginals import BIG, Marginals, marginals
 from repro.core.network import Instance
 from repro.core.traffic import (
@@ -114,7 +116,8 @@ class GPResult:
 # Blocked node sets
 # ---------------------------------------------------------------------------
 
-def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray) -> jnp.ndarray:
+def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray,
+                 method: str = "bitset") -> jnp.ndarray:
     """(A,K1,V,V) bool: j in B_i(a,k).
 
     j is blocked for i at stage (a,k) if (Section IV "Blocked node set"):
@@ -123,20 +126,22 @@ def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray) -> jnp.ndarray:
       3) j's routing subtree for (a,k) contains an improper link (p,q)
          with dD/dt_q > dD/dt_p.
 
-    Category 3 ("tagged" nodes) is computed by reverse boolean propagation
-    along the routing DAG — at most V sweeps, vectorized over (A,K1).
+    Category 3 ("tagged" nodes) is a monotone boolean fixed point along the
+    routing DAG.  method="bitset" (default) runs it through the bit-packed
+    kernel — uint32-packed successor words, while-loop frontier early exit
+    at the DAG diameter (kernels/blocked_sets.py, DESIGN.md §13);
+    method="scan" keeps the seed's dense V-sweep ``lax.scan`` as the
+    differential reference (tests/test_blocked_sets.py asserts bit-exact
+    agreement — the early exit stops precisely at the shared fixed point).
     """
     route = phi.e > 0.0                                         # (A,K1,V,V)
     worse = pdt[:, :, None, :] > pdt[:, :, :, None] + _BLOCK_EPS  # pdt_q > pdt_p
     improper = route & worse
 
-    def sweep(tagged, _):
-        # tagged_p = exists q: route[p,q] and (improper[p,q] or tagged[q])
-        hit = improper | (route & tagged[:, :, None, :])
-        return jnp.any(hit, axis=-1), None
-
-    tagged0 = jnp.zeros(pdt.shape, dtype=bool)
-    tagged, _ = jax.lax.scan(sweep, tagged0, None, length=inst.V)
+    if method == "bitset":
+        tagged = ops.blocked_tagged(route, improper)
+    else:
+        tagged = blocked_sets_mod.tagged_scan_dense(route, improper)
 
     blocked = (~inst.adj[None, None]) | improper | worse | tagged[:, :, None, :]
     return blocked
@@ -468,6 +473,19 @@ def solve_scan(
 
 _SOLVE_CHUNK = 32    # host checks the early-stop latch once per chunk
 
+# Adaptive chunk schedule for batched ensembles (gp.solve_batched): start
+# short so early-converging members retire (and the batch compacts) after 8
+# iterations, then double up to 64 as the long tail sets in.  All lengths
+# stay powers of two — {8, 16, 32, 64} — so the schedule adds no XLA cache
+# entries beyond those four per compaction bucket size.
+_CHUNK_MIN = 8
+_CHUNK_MAX = 64
+
+
+def _prev_pow2(n: int) -> int:
+    """Largest power of two <= n (n >= 1)."""
+    return 1 << (n.bit_length() - 1)
+
 
 def solve(
     inst: Instance,
@@ -556,9 +574,14 @@ def solve_batched(
     Semantically ``jax.vmap(solve_scan)`` with two wall-clock refinements
     (DESIGN.md §10):
 
-      * **chunked early stop** — the loop body never syncs to host; only the
-        batched ``done`` latch is read back once per ``_SOLVE_CHUNK``
-        iterations, and the sweep ends when every member has converged;
+      * **chunked early stop, adaptive lengths** — the loop body never
+        syncs to host; only the batched ``done`` latch is read back at
+        chunk boundaries, and the sweep ends when every member has
+        converged.  Chunks start at ``_CHUNK_MIN`` = 8 iterations and
+        double up to ``_CHUNK_MAX`` = 64, so early-converging members
+        retire (and the batch compacts) quickly while long tails amortize
+        the host sync — with only pow2 chunk lengths, bounding XLA cache
+        entries;
       * **convergence compaction** (``compact=True``) — at chunk boundaries,
         converged members retire and the active set is re-packed into the
         next power-of-two bucket, so a long-tailed ensemble does not keep
@@ -624,8 +647,13 @@ def solve_batched(
         carry = carry._replace(done=carry.done | pad0)
         ids = np.concatenate([ids, np.full(bucket0 - B, -1)])
     steps = 0
+    chunk = _CHUNK_MIN
     while steps < max_iters:
-        length = min(_SOLVE_CHUNK, max_iters - steps)
+        # pow2 lengths only (min with the largest pow2 <= the remaining
+        # budget), so the whole schedule draws from {8, 16, 32, 64} plus
+        # the pow2 ladder of any sub-8 tail
+        length = min(chunk, _prev_pow2(max_iters - steps))
+        chunk = min(chunk * 2, _CHUNK_MAX)
         carry, (cs, rs) = _scan_chunk_batched(
             inst_p, carry, alpha_, tol_, patience_, max_iters_, ae_p, ac_p,
             length=length, scaled=scaled, solver=solver,

@@ -62,8 +62,9 @@ def pdt_recursion(
     Each stage's matrix ``I - Phi_k`` is independent of the chain coupling
     (only the RHS carries pdt_{k+1}), so the default path factors all
     (a, k) systems in ONE batched LU (``traffic.stage_factors`` — shareable
-    with the traffic sweep, which solves the transposed system) and keeps
-    only O(V^2) triangular solves inside the sequential scan.
+    with the traffic sweep, which solves the transposed system) and runs
+    the whole reverse recursion as ONE fused chain-substitution call
+    (``ops.fused_chain_solve``, DESIGN.md §13).
     """
     solver = resolve_solver(solver, phi.e.shape[-1])
     if solver != "batched_lu":
@@ -73,26 +74,17 @@ def pdt_recursion(
 
     if fact is None:
         fact = stage_factors(phi.e)
-
-    def per_app(fact_a, phi_e_a, phi_c_a, L_a, w_a):
-        link_term = jnp.einsum(
-            "kij,kij->ki", phi_e_a, L_a[:, None, None] * Dp[None]
-        )  # (K1, V): sum_j phi_ij L_k D'_ij
-
-        def step(pdt_next, xs):
-            fact_k, phi_c_k, lt_k, w_k = xs
-            b = lt_k + phi_c_k * (w_k * inst.wnode * Cp + pdt_next)
-            pdt_k = ops.batched_solve_factored(fact_k, b, trans=0)
-            pdt_k = jnp.maximum(pdt_k, 0.0)
-            return pdt_k, pdt_k
-
-        zero = jnp.zeros(inst.V, dtype=phi_e_a.dtype)
-        _, pdt_a = jax.lax.scan(
-            step, zero, (fact_a, phi_c_a, link_term, w_a), reverse=True
-        )
-        return pdt_a
-
-    return jax.vmap(per_app)(fact, phi.e, phi.c, inst.L, inst.w)
+    # One fused call consumes the whole (A, K1, V, V) factor stack, walking
+    # k in reverse: pdt_k = (I - Phi_k)^-1 (base_k + phi_c_k * pdt_{k+1})
+    # with base_k = [link term] + phi_c_k * w_k * wnode * C' and the
+    # nonnegativity clamp applied inside the fused sweep.
+    link_term = jnp.einsum(
+        "akij,akij->aki", phi.e, inst.L[:, :, None, None] * Dp[None, None]
+    )  # (A, K1, V): sum_j phi_ij L_k D'_ij
+    base = link_term + phi.c * (
+        inst.w[:, :, None] * inst.wnode[None, None] * Cp[None, None])
+    return ops.fused_chain_solve(fact, base, phi.c, trans=0, reverse=True,
+                                 clamp=True)
 
 
 def _per_app_dense(inst, Dp, Cp, phi_e_a, phi_c_a, L_a, w_a):

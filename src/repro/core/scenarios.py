@@ -183,15 +183,29 @@ class SweepResult:
 def solve_family(
     insts: Sequence[network.Instance],
     phi0s: Optional[Sequence[Phi]] = None,
+    *,
+    masks_fn: Optional[Callable] = None,
     **gp_kwargs,
 ) -> list[gp.GPResult]:
     """Solve same-cost-family instances as ONE padded, vmapped batch.
+
+    ``masks_fn`` (e.g. ``baselines.spoc_masks``) maps an Instance to
+    (allowed_e, allowed_c, phi0); it is vmapped over the padded batch so
+    restricted solvers — the SPOC/LCOF baselines — run through the same
+    batched device program as unrestricted GP.  An explicit ``phi0s``
+    overrides the masks' initial strategies.
 
     Returns per-instance trimmed GPResults with padding stripped from phi
     and histories taken from the batched dense scan outputs.
     """
     binst = batch.pad_instances(insts)
     phi0 = batch.pad_phis(phi0s, insts) if phi0s is not None else None
+    if masks_fn is not None:
+        allowed_e, allowed_c, mask_phi0 = jax.vmap(masks_fn)(binst)
+        gp_kwargs.setdefault("allowed_e", allowed_e)
+        gp_kwargs.setdefault("allowed_c", allowed_c)
+        if phi0 is None:
+            phi0 = mask_phi0
     scan = gp.solve_batched(binst, phi0, **gp_kwargs)
     out = []
     for b, inst in enumerate(insts):
@@ -206,6 +220,7 @@ def solve_family(
 
 
 def run_sweep(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
+              masks_fn: Optional[Callable] = None,
               **gp_kwargs) -> SweepResult:
     """Expand a sweep and solve it batched.
 
@@ -213,6 +228,9 @@ def run_sweep(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
     ``"fig6-congestion"``, ``"fig7-packetsize"``, ``"seed-ensemble"``,
     ``"mixed-topology"`` — expanded with ``sweep_kwargs``) or an explicit
     ``list[Scenario]``; remaining kwargs go to ``gp.solve_batched``.
+    ``masks_fn`` restricts the direction set per member (the SPOC/LCOF
+    baselines — ``baselines.BASELINE_MASKS``); it is evaluated under
+    ``jax.vmap`` on each padded group (see :func:`solve_family`).
     Returns a :class:`SweepResult` whose ``results`` align 1:1 with
     ``scenarios`` (trimmed GPResults, phi un-padded back to each member's
     true (A, K1, V, V)).
@@ -246,7 +264,8 @@ def run_sweep(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
     results: list[Optional[gp.GPResult]] = [None] * len(scenarios)
     t0 = time.perf_counter()
     for idxs in groups.values():
-        group_res = solve_family([scenarios[i].instance for i in idxs], **gp_kwargs)
+        group_res = solve_family([scenarios[i].instance for i in idxs],
+                                 masks_fn=masks_fn, **gp_kwargs)
         for i, r in zip(idxs, group_res):
             results[i] = r
     seconds = time.perf_counter() - t0
@@ -255,15 +274,31 @@ def run_sweep(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
 
 
 def run_sweep_serial(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
+                     masks_fn: Optional[Callable] = None,
                      **gp_kwargs) -> SweepResult:
     """The serial reference: one ``gp.solve`` per scenario (for speedup
-    comparisons against :func:`run_sweep`)."""
+    comparisons against :func:`run_sweep`).
+
+    ``masks_fn`` mirrors :func:`run_sweep`'s: per-scenario
+    (allowed_e, allowed_c, phi0) direction restrictions are computed on
+    each (unpadded) instance and forwarded to ``gp.solve``, so the
+    serial-vs-batched baseline comparison is apples-to-apples — both
+    paths solve exactly the same restricted problems.
+    """
     if isinstance(name_or_scenarios, str):
         scenarios = expand(name_or_scenarios, **(sweep_kwargs or {}))
     else:
         scenarios = list(name_or_scenarios)
     t0 = time.perf_counter()
-    results = [gp.solve(sc.instance, **gp_kwargs) for sc in scenarios]
+    results = []
+    for sc in scenarios:
+        kw = dict(gp_kwargs)
+        phi0 = None
+        if masks_fn is not None:
+            allowed_e, allowed_c, phi0 = masks_fn(sc.instance)
+            kw.setdefault("allowed_e", allowed_e)
+            kw.setdefault("allowed_c", allowed_c)
+        results.append(gp.solve(sc.instance, phi0, **kw))
     seconds = time.perf_counter() - t0
     return SweepResult(scenarios=scenarios, results=results, seconds=seconds,
                        n_batches=len(scenarios))

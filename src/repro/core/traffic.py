@@ -13,12 +13,14 @@ are vmapped.  This is the synchronous, vectorized equivalent of the paper's
 per-packet flow propagation.
 
 The default solver path batches all (app, stage) factorizations into ONE
-``(A*K1, V, V)`` LU (``stage_factors`` -> ``kernels.ops.batched_factor``),
-leaving only O(V^2) triangular solves inside the chain scan.  The same
-factors serve the marginal recursion (``core/marginals.py``) because its
-matrix ``I - Phi_k`` is this one un-transposed — one factorization per GP
-step covers both sweeps (DESIGN.md §12).  ``solver="dense"`` keeps the
-seed's per-stage ``jnp.linalg.solve`` as the differential reference.
+``(A*K1, V, V)`` LU (``stage_factors`` -> ``kernels.ops.batched_factor``)
+and then consumes the whole factor stack in ONE fused chain-substitution
+call (``ops.fused_chain_solve`` — per-stage padding/transpose/permutation
+costs hoisted out of the scan, DESIGN.md §13).  The same factors serve the
+marginal recursion (``core/marginals.py``) because its matrix
+``I - Phi_k`` is this one un-transposed — one factorization per GP step
+covers both sweeps (DESIGN.md §12).  ``solver="dense"`` keeps the seed's
+per-stage ``jnp.linalg.solve`` as the differential reference.
 """
 
 from __future__ import annotations
@@ -60,10 +62,14 @@ def _solve_stage(phi_e_k: jnp.ndarray, inject: jnp.ndarray) -> jnp.ndarray:
 
 
 # Below this node count the CPU fallback's batched factor+substitution is
-# dispatch-bound and loses to the per-stage dense solve (measured: V=22
-# dense wins ~3x; V=100 batched wins ~1.4x on 2-core CPU); on TPU the
-# Pallas kernel path is always preferred.  DESIGN.md §12.
-AUTO_MIN_V = 64
+# dispatch-bound and loses to the per-stage dense solve.  The fused chain
+# substitution (ops.fused_chain_solve — per-stage padding/transpose/perm
+# costs hoisted out of the scan, statically-sliced block matvecs) moved the
+# measured crossover down from 64: on the 2-core CPU reference box, dense
+# wins ~1.4x at V=32, parity at V=48, batched wins ~1.2x at V=64 and ~1.8x
+# at V=100 (DESIGN.md §13).  On TPU the Pallas kernel path is always
+# preferred.
+AUTO_MIN_V = 48
 
 
 def resolve_solver(solver: str, V: int) -> str:
@@ -111,23 +117,20 @@ def stage_traffic(
     if solver == "batched_lu":
         if fact is None:
             fact = stage_factors(phi.e)
-
-        def per_app_lu(fact_a, phi_c_a, r_a):
-            def step(inject, xs):
-                # NOTE: no clamping here — the map phi -> t must stay
-                # exactly linear so closed-form marginals (3)-(4) match
-                # autodiff and finite differences (tests/test_marginals.py).
-                # Divergent solutions from loopy candidate strategies are
-                # rejected by ``traffic_is_valid`` instead.
-                fact_k, phi_c_k = xs
-                t_k = ops.batched_solve_factored(fact_k, inject, trans=1)
-                g_k = t_k * phi_c_k
-                return g_k, (t_k, g_k)
-
-            _, (t_a, g_a) = jax.lax.scan(step, r_a, (fact_a, phi_c_a))
-            return t_a, g_a
-
-        return jax.vmap(per_app_lu)(fact, phi.c, inst.r)
+        # One fused call consumes the whole (A, K1, V, V) factor stack:
+        # t_k = (I - Phi_k)^-T (base_k + mult_k * t_{k-1}) with base_0 = r,
+        # base_{k>0} = 0 and mult_k = phi_c_{k-1} (each computed packet of
+        # stage k-1 injects one next-stage packet).  NOTE: no clamping — the
+        # map phi -> t must stay exactly linear so closed-form marginals
+        # (3)-(4) match autodiff and finite differences
+        # (tests/test_marginals.py); divergent solutions from loopy
+        # candidate strategies are rejected by ``traffic_is_valid`` instead.
+        base = jnp.concatenate(
+            [inst.r[:, None, :], jnp.zeros_like(phi.c[:, 1:])], axis=1)
+        mult = jnp.concatenate(
+            [jnp.zeros_like(phi.c[:, :1]), phi.c[:, :-1]], axis=1)
+        t = ops.fused_chain_solve(fact, base, mult, trans=1)
+        return t, t * phi.c
 
     def per_app(phi_e_a, phi_c_a, r_a):
         def step(inject, xs):

@@ -163,6 +163,92 @@ def _block_subst(mat: jnp.ndarray, dinv: jnp.ndarray, b: jnp.ndarray,
     return x
 
 
+def _subst_single(mat: jnp.ndarray, dinv: jnp.ndarray, b: jnp.ndarray,
+                  nb: int, *, lower: bool) -> jnp.ndarray:
+    """Single-system variant of :func:`_block_subst`: mat (Vp, Vp),
+    dinv (nblk, nb, nb), b (Vp,) -> x (Vp,).  Batches by jax.vmap.
+
+    The block-row loop is static, so the coupling to already-solved blocks
+    is a *statically sliced* matvec (``mat[sl, :i*nb] @ x[:i*nb]``) rather
+    than the masked full-row product of ``_block_subst`` — half the flops
+    and no mask materialization, which matters inside the fused chain scan.
+    """
+    Vp = b.shape[0]
+    nblk = Vp // nb
+    x = jnp.zeros_like(b)
+    order = range(nblk) if lower else range(nblk - 1, -1, -1)
+    for i in order:
+        sl = slice(i * nb, (i + 1) * nb)
+        done = slice(0, i * nb) if lower else slice((i + 1) * nb, Vp)
+        s = mat[sl, done] @ x[done] if done.stop != done.start else 0.0
+        x = x.at[sl].set(dinv[i] @ (b[sl] - s))
+    return x
+
+
+def ref_chain_solve(lu: jnp.ndarray, perm: jnp.ndarray,
+                    linv: jnp.ndarray, uinv: jnp.ndarray,
+                    base: jnp.ndarray, mult: jnp.ndarray,
+                    *, trans: int = 0, reverse: bool = False,
+                    clamp: bool = False, nb: int = REF_NB) -> jnp.ndarray:
+    """Fused sequential solve over a whole factor stack (one chain).
+
+    Solves, along the stage axis k (forward, or backward with
+    ``reverse=True``),
+
+        x_k = A_k^{-1(T)} (base_k + mult_k * x_prev),     x_prev(start) = 0
+
+    for lu (K, V, V), perm (K, V), linv/uinv (K, nblk, nb, nb) and
+    base/mult (K, V), returning x (K, V) — the shared recurrence shape of
+    the traffic fixed point (trans=1, forward, mult = shifted phi_c) and
+    the marginal recursion (trans=0, reverse, mult = phi_c, clamp >= 0).
+
+    Compared with calling :func:`ref_solve` once per stage inside a scan,
+    every per-stage fixed cost — factor padding, the trans transpose, the
+    permutation (arg)sort, dtype casts — is hoisted out of the loop and
+    paid ONCE for the whole (K, V, V) stack; the scan body is only the two
+    block-substitution sweeps plus the O(V) affine RHS.  This is what
+    moves the CPU dense-vs-batched crossover (traffic.AUTO_MIN_V) down
+    (DESIGN.md §13).
+    """
+    K, V = base.shape
+    Vp = linv.shape[-3] * nb
+    lup = _pad_square(lu.astype(jnp.float32), Vp)
+    basep = jnp.pad(base.astype(jnp.float32), ((0, 0), (0, Vp - V)))
+    multp = jnp.pad(mult.astype(jnp.float32), ((0, 0), (0, Vp - V)))
+    tail = jnp.broadcast_to(jnp.arange(V, Vp, dtype=perm.dtype), (K, Vp - V))
+    permp = jnp.concatenate([perm, tail], axis=1).astype(jnp.int32)
+    if trans == 0:
+        mats, d1, d2 = lup, linv, uinv
+        pre, post = permp, None
+    else:
+        # A^T = U^T L^T P: sweep the transposed pack, un-permute the result
+        mats = lup.transpose(0, 2, 1)
+        d1 = uinv.transpose(0, 1, 3, 2)
+        d2 = linv.transpose(0, 1, 3, 2)
+        pre, post = None, jnp.argsort(permp, axis=1)
+
+    def step(carry, xs):
+        mat_k, d1_k, d2_k, base_k, mult_k, pre_k, post_k = xs
+        b = base_k + mult_k * carry
+        if pre is not None:
+            b = b[pre_k]
+        y = _subst_single(mat_k, d1_k, b, nb, lower=True)
+        x = _subst_single(mat_k, d2_k, y, nb, lower=False)
+        if post is not None:
+            x = x[post_k]
+        if clamp:
+            x = jnp.maximum(x, 0.0)
+        return x, x
+
+    zeros_i = jnp.zeros((K, 1), jnp.int32)  # placeholder for the unused perm
+    xs = (mats, d1, d2, basep, multp,
+          pre if pre is not None else zeros_i,
+          post if post is not None else zeros_i)
+    _, x = jax.lax.scan(step, jnp.zeros((Vp,), jnp.float32), xs,
+                        reverse=reverse)
+    return x[:, :V]
+
+
 def ref_solve(lu: jnp.ndarray, perm: jnp.ndarray,
               linv: jnp.ndarray, uinv: jnp.ndarray, rhs: jnp.ndarray,
               *, trans: int = 0, nb: int = REF_NB) -> jnp.ndarray:
@@ -243,17 +329,14 @@ def _lu_kernel(a_ref, lu_ref, *, nb: int):
     lu_ref[0, ...] = a.astype(lu_ref.dtype)
 
 
-def _solve_kernel(lu_ref, b_ref, x_ref, *, trans: int):
-    """Two-sweep substitution for one packed-LU system.
+def _two_sweep(luw: jnp.ndarray, b: jnp.ndarray, *, trans: int) -> jnp.ndarray:
+    """In-kernel two-sweep substitution on a packed factor.
 
-    trans=0 solves L U x = b; trans=1 solves (L U)^T x = b, i.e. first the
-    lower-triangular U^T then the unit-upper L^T — both become row sweeps of
-    the transposed packed factor, so one upfront transpose unifies the code.
+    ``luw`` is the packed L\\U (already transposed by the caller when
+    trans=1); solves L U x = b (trans=0) or (L U)^T x = b (trans=1) — in
+    both cases a forward then a backward row sweep of ``luw``.
     """
-    lu = lu_ref[0].astype(jnp.float32)
-    b = b_ref[0, 0].astype(jnp.float32)                          # (Vp,)
-    Vp = lu.shape[0]
-    luw = lu.T if trans else lu
+    Vp = luw.shape[0]
     vidx = jax.lax.broadcasted_iota(jnp.int32, (Vp,), 0)
 
     def row_of(m, i):
@@ -277,8 +360,55 @@ def _solve_kernel(lu_ref, b_ref, x_ref, *, trans: int):
         d = 1.0 if trans else diag_of(luw, i)
         return jnp.where(vidx == i, (x - s) / d, x)
 
-    x = jax.lax.fori_loop(0, Vp, bwd, y)
+    return jax.lax.fori_loop(0, Vp, bwd, y)
+
+
+def _solve_kernel(lu_ref, b_ref, x_ref, *, trans: int):
+    """Two-sweep substitution for one packed-LU system.
+
+    trans=0 solves L U x = b; trans=1 solves (L U)^T x = b, i.e. first the
+    lower-triangular U^T then the unit-upper L^T — both become row sweeps of
+    the transposed packed factor, so one upfront transpose unifies the code.
+    """
+    lu = lu_ref[0].astype(jnp.float32)
+    b = b_ref[0, 0].astype(jnp.float32)                          # (Vp,)
+    luw = lu.T if trans else lu
+    x = _two_sweep(luw, b, trans=trans)
     x_ref[0, 0, ...] = x.astype(x_ref.dtype)
+
+
+def _chain_solve_kernel(lu_ref, base_ref, mult_ref, x_ref, *, trans: int,
+                        reverse: bool, clamp: bool, K: int):
+    """Fused chain of substitutions over one (K, Vp, Vp) factor stack.
+
+    One batch member (= one app's whole stage chain) per grid step; the
+    factor stack stays VMEM-resident and a single ``fori_loop`` walks the
+    stages, so the sequential chain never leaves the core:
+
+        x_k = A_k^{-1(T)} (base_k + mult_k * x_prev)
+
+    Assumes identity row permutation (the unpivoted Pallas factors of
+    :func:`lu_factor`); LAPACK-pivoted reference factors must go through
+    :func:`ref_chain_solve` instead (kernels/ops.py dispatches).
+    """
+    Vp = lu_ref.shape[-1]
+
+    zero = jnp.int32(0)
+
+    def body(j, carry):
+        k = (K - 1 - j) if reverse else j
+        lu = pl.load(lu_ref, (zero, k, slice(None), slice(None))).astype(jnp.float32)
+        base_k = pl.load(base_ref, (zero, k, slice(None))).astype(jnp.float32)
+        mult_k = pl.load(mult_ref, (zero, k, slice(None))).astype(jnp.float32)
+        b = base_k + mult_k * carry
+        luw = lu.T if trans else lu
+        x = _two_sweep(luw, b, trans=trans)
+        if clamp:
+            x = jnp.maximum(x, 0.0)
+        pl.store(x_ref, (zero, k, slice(None)), x.astype(x_ref.dtype))
+        return x
+
+    jax.lax.fori_loop(0, K, body, jnp.zeros((Vp,), jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -327,6 +457,38 @@ def lu_solve(lu: jnp.ndarray, rhs: jnp.ndarray, *, trans: int = 0,
         interpret=interpret,
     )(a, b[:, None, :])
     return out[:, 0, :V]
+
+
+def chain_solve(lu: jnp.ndarray, base: jnp.ndarray, mult: jnp.ndarray,
+                *, trans: int = 0, reverse: bool = False, clamp: bool = False,
+                interpret: bool = False) -> jnp.ndarray:
+    """Fused chain solve: lu (B, K, V, V), base/mult (B, K, V) -> (B, K, V).
+
+    Each grid step runs one member's whole stage chain inside the kernel
+    (see :func:`_chain_solve_kernel`); identity row permutation assumed.
+    """
+    B, K, V, _ = lu.shape
+    Vp = _pad_dim(V, interpret)
+    a = _pad_square(lu.reshape(B * K, V, V).astype(jnp.float32), Vp)
+    a = a.reshape(B, K, Vp, Vp)
+    pad = ((0, 0), (0, 0), (0, Vp - V))
+    basep = jnp.pad(base.astype(jnp.float32), pad)
+    multp = jnp.pad(mult.astype(jnp.float32), pad)
+
+    out = pl.pallas_call(
+        functools.partial(_chain_solve_kernel, trans=trans, reverse=reverse,
+                          clamp=clamp, K=K),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, K, Vp, Vp), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, K, Vp), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, K, Vp), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K, Vp), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, Vp), jnp.float32),
+        interpret=interpret,
+    )(a, basep, multp)
+    return out[:, :, :V]
 
 
 def factor_ok(lu: jnp.ndarray) -> jnp.ndarray:

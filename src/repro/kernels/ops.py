@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import batched_solve as _bs
+from repro.kernels import blocked_sets as _bset
 from repro.kernels import chain_propagate as _cp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ssd_chunk as _sc
@@ -170,6 +171,48 @@ def batched_solve_factored(fact: BatchedLU, rhs: jnp.ndarray, *,
     return x.reshape(rhs.shape)
 
 
+@functools.partial(jax.jit, static_argnames=("trans", "reverse", "clamp",
+                                              "use_pallas"))
+def fused_chain_solve(fact: BatchedLU, base: jnp.ndarray, mult: jnp.ndarray,
+                      *, trans: int = 0, reverse: bool = False,
+                      clamp: bool = False,
+                      use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Fused sequential solve along the stage axis of a factor stack.
+
+    fact with leading dims (..., K), base/mult (..., K, V) -> x (..., K, V)
+    where, walking k forward (or backward with ``reverse=True``),
+
+        x_k = A_k^{-1(T)} (base_k + mult_k * x_prev),   x_prev(start) = 0,
+
+    optionally clamped at 0 (``clamp=True`` — the marginal recursion's
+    nonnegativity).  This is the chain-scan substitution of BOTH GP sweeps
+    (traffic: trans=1 forward, marginals: trans=0 reverse) issued as ONE
+    call consuming the whole (K, V, V) factor stack: per-stage fixed costs
+    (padding, transposes, permutation sorts, dispatch) are paid once per GP
+    step instead of once per stage (DESIGN.md §13).
+
+    The Pallas path runs each member's chain inside one kernel invocation
+    (factor stack VMEM-resident) and assumes the identity row permutation
+    of the unpivoted Pallas factors; LAPACK-pivoted reference factors are
+    handled by the reference path.
+    """
+    lu_flat, lead = _flatten_batch(fact.lu, 3)         # (Bf, K, V, V)
+    base_flat, _ = _flatten_batch(base, 2)
+    mult_flat, _ = _flatten_batch(mult, 2)
+    if _use_pallas(use_pallas):
+        x = _bs.chain_solve(lu_flat, base_flat, mult_flat, trans=trans,
+                            reverse=reverse, clamp=clamp, interpret=INTERPRET)
+    else:
+        perm_flat, _ = _flatten_batch(fact.perm, 2)
+        linv_flat, _ = _flatten_batch(fact.linv, 4)
+        uinv_flat, _ = _flatten_batch(fact.uinv, 4)
+        x = jax.vmap(
+            functools.partial(_bs.ref_chain_solve, trans=trans,
+                              reverse=reverse, clamp=clamp)
+        )(lu_flat, perm_flat, linv_flat, uinv_flat, base_flat, mult_flat)
+    return x.reshape(base.shape)
+
+
 @functools.partial(jax.jit, static_argnames=("trans", "use_pallas"))
 def batched_solve(mats: jnp.ndarray, rhs: jnp.ndarray, *, trans: int = 0,
                   use_pallas: Optional[bool] = None
@@ -189,3 +232,48 @@ def batched_solve(mats: jnp.ndarray, rhs: jnp.ndarray, *, trans: int = 0,
     rhs_flat, _ = _flatten_batch(rhs, 1)
     resid = _bs.residuals(mats_flat, x_flat, rhs_flat, trans=trans)
     return x, resid.reshape(lead)
+
+
+# ---------------------------------------------------------------------------
+# Bit-packed blocked-set propagation (kernels/blocked_sets.py — DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# The Pallas tagged kernel keeps packed successor words on the lane axis
+# (W = ceil(V/32) lanes), which only fills real-TPU lanes at V >= 4096; below
+# that the packed-jnp path wins even on TPU, so the Pallas path engages by
+# default only for very large graphs (interpret mode on request, for tests).
+_BITSET_PALLAS_MIN_V = 4096
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def blocked_tagged(route: jnp.ndarray, improper: jnp.ndarray, *,
+                   use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Category-3 "tagged node" flags of the blocked sets B_i(a,k).
+
+    route, improper (..., V, V) bool -> tagged (..., V) bool: node p is
+    tagged iff its routing subtree contains an improper link, i.e. the
+    monotone fixed point of
+
+        tagged[p] = exists q: route[p, q] and (improper[p, q] or tagged[q]).
+
+    Both matrices are bit-packed into uint32 lanes once and the fixed point
+    is reached by word-wise OR-AND rounds with a while-loop frontier early
+    exit at the routing-DAG diameter — exactly equal to the seed's dense
+    V-round sweep, at ~1/32 the traffic and ~diameter/V the rounds
+    (kernels/blocked_sets.py).
+    """
+    flat, lead = _flatten_batch(route, 2)
+    V = flat.shape[-1]
+    Vp, _ = _bset.padded_nodes(V)
+    imp_flat = improper.reshape(flat.shape)
+    row_pad = ((0, 0), (0, Vp - V), (0, 0))
+    route_bits = jnp.pad(_bset.pack_bits(flat), row_pad)
+    imp_bits = jnp.pad(_bset.pack_bits(imp_flat), row_pad)
+    pallas = (_PALLAS_DEFAULT and V >= _BITSET_PALLAS_MIN_V
+              if use_pallas is None else use_pallas)
+    if pallas:
+        tagged = _bset.tagged_pallas(route_bits, imp_bits, V,
+                                     interpret=INTERPRET)
+    else:
+        tagged = _bset.tagged_packed(route_bits, imp_bits, V)
+    return tagged.reshape(lead + (V,))

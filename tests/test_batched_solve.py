@@ -124,6 +124,41 @@ def test_singular_member_flags_without_poisoning(use_pallas):
     assert np.all(resid[good] < 1e-5)
 
 
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["ref_lapack", "pallas_interpret"])
+@pytest.mark.parametrize("trans,reverse,clamp",
+                         [(1, False, False), (0, True, True)])
+def test_fused_chain_solve_matches_per_stage_loop(trans, reverse, clamp,
+                                                  use_pallas):
+    """ops.fused_chain_solve == the per-stage batched_solve_factored loop
+    it replaced, for both GP sweep shapes (traffic: trans=1 forward;
+    marginals: trans=0 reverse clamped)."""
+    Bf, K, V = 3, 5, 22
+    keys = jax.random.split(jax.random.PRNGKey(K * V), 3)
+    P = jax.random.uniform(keys[0], (Bf, K, V, V))
+    mats = jnp.eye(V) - 0.5 * P / jnp.sum(P, axis=-1, keepdims=True)
+    base = jax.random.uniform(keys[1], (Bf, K, V)) - (0.5 if clamp else 0.0)
+    mult = jax.random.uniform(keys[2], (Bf, K, V))
+    fact = ops.batched_factor(mats, use_pallas=use_pallas)
+
+    carry = jnp.zeros((Bf, V))
+    want = [None] * K
+    for k in (range(K - 1, -1, -1) if reverse else range(K)):
+        b = base[:, k] + mult[:, k] * carry
+        fk = jax.tree_util.tree_map(lambda x: x[:, k], fact)
+        x = ops.batched_solve_factored(fk, b, trans=trans,
+                                       use_pallas=use_pallas)
+        if clamp:
+            x = jnp.maximum(x, 0.0)
+        want[k] = x
+        carry = x
+    got = ops.fused_chain_solve(fact, base, mult, trans=trans,
+                                reverse=reverse, clamp=clamp,
+                                use_pallas=use_pallas)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(jnp.stack(want, 1)),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_stage_factors_serve_both_sweeps():
     """One ``stage_factors`` factorization reproduces BOTH the traffic
     (transposed) and marginal (plain) sweeps of the dense seed path."""

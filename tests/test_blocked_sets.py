@@ -1,0 +1,175 @@
+"""Bitset blocked-set kernel parity + batched-baseline parity.
+
+Acceptance properties of PR 3's hot-path fusion:
+  (a) the bit-packed tagged-node kernel (kernels/blocked_sets.py, both the
+      packed-jnp and the interpret-mode Pallas path) equals the seed's
+      dense V-sweep scan *bit for bit* — on random routing matrices, on
+      random feasible strategies (which carry cycles and many improper
+      links), and on congested mid-solve GP iterates;
+  (b) the batched SPOC/LCOF baselines (mask constructors vmapped over
+      padded families) reproduce the serial baselines on the Table II
+      scenarios within 1e-4.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, gp, marginals, network, scenarios, traffic
+from repro.kernels import blocked_sets as bset
+from repro.kernels import ops
+
+
+def _assert_tagged_parity(route, improper):
+    ref = np.asarray(bset.tagged_scan_dense(route, improper))
+    np.testing.assert_array_equal(
+        np.asarray(ops.blocked_tagged(route, improper)), ref)
+    np.testing.assert_array_equal(
+        np.asarray(ops.blocked_tagged(route, improper, use_pallas=True)), ref)
+
+
+# ---------------------------------------------------------------------------
+# (a) kernel parity
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_roundtrip():
+    x = jax.random.uniform(jax.random.PRNGKey(0), (3, 70)) < 0.5
+    np.testing.assert_array_equal(
+        np.asarray(bset.unpack_bits(bset.pack_bits(x), 70)), np.asarray(x))
+    assert bset.pack_bits(x).dtype == jnp.uint32
+    assert bset.pack_bits(x).shape == (3, 3)          # ceil(70 / 32)
+
+
+@pytest.mark.parametrize("V", [5, 31, 32, 33, 100])
+def test_bitset_matches_dense_scan_random(V):
+    """Random sparse routing matrices, including word-boundary sizes."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(V))
+    route = jax.random.uniform(k1, (6, V, V)) < 0.15
+    improper = route & (jax.random.uniform(k2, (6, V, V)) < 0.3)
+    assert bool(improper.any())
+    _assert_tagged_parity(route, improper)
+
+
+def test_bitset_matches_dense_scan_dense_cyclic():
+    """Fully dense route graph (every node reaches every cycle) — the
+    propagation worst case, and a non-DAG input the monotone fixed point
+    still covers."""
+    V = 40
+    route = ~jnp.eye(V, dtype=bool)[None]
+    improper = jnp.zeros_like(route).at[0, 3, 7].set(True)
+    _assert_tagged_parity(route, improper)
+    # everything reaching node 3 (here: all nodes) must be tagged
+    assert bool(bset.tagged_scan_dense(route, improper).all())
+
+
+@pytest.mark.parametrize("name", ["abilene", "geant"])
+def test_blocked_sets_parity_on_random_strategies(name):
+    """Random feasible strategies carry cycles and many improper links —
+    the regime where tagging actually propagates."""
+    inst = network.table_ii_instance(name, seed=0, rate_scale=2.0)
+    e = jax.random.uniform(
+        jax.random.PRNGKey(7), (inst.A, inst.K1, inst.V, inst.V)
+    ) * inst.adj[None, None]
+    c = jax.random.uniform(jax.random.PRNGKey(8), (inst.A, inst.K1, inst.V))
+    phi = traffic.renormalize(inst, traffic.Phi(e=e, c=c))
+    m = marginals.marginals(inst, phi)
+    route = phi.e > 0.0
+    worse = m.pdt[:, :, None, :] > m.pdt[:, :, :, None] + 1e-7
+    assert bool((route & worse).any())        # improper links present
+    b_bit = gp.blocked_sets(inst, phi, m.pdt, method="bitset")
+    b_scan = gp.blocked_sets(inst, phi, m.pdt, method="scan")
+    np.testing.assert_array_equal(np.asarray(b_bit), np.asarray(b_scan))
+
+
+def test_blocked_sets_parity_on_congested_midsolve_iterate():
+    """A true mid-solve iterate (congested Abilene, aggressive stepsize)
+    where improper links appear transiently."""
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=3.5)
+    res = gp.solve(inst, alpha=0.3, max_iters=2, patience=10**6, tol=0.0)
+    m = marginals.marginals(inst, res.phi)
+    route = res.phi.e > 0.0
+    worse = m.pdt[:, :, None, :] > m.pdt[:, :, :, None] + 1e-7
+    assert bool((route & worse).any())        # the iterate is congested
+    b_bit = gp.blocked_sets(inst, res.phi, m.pdt, method="bitset")
+    b_scan = gp.blocked_sets(inst, res.phi, m.pdt, method="scan")
+    np.testing.assert_array_equal(np.asarray(b_bit), np.asarray(b_scan))
+
+
+def test_gp_step_invariant_to_blocked_method(monkeypatch):
+    """End-to-end drop-in swap: eager gp_step trajectories are identical
+    whether blocked_sets routes through the bitset kernel or the dense
+    scan (the eager path sidesteps jit caches, so the monkeypatch is
+    guaranteed to take effect)."""
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=3.0)
+
+    def run_steps():
+        phi = gp.init_phi(inst)
+        costs = []
+        for _ in range(3):
+            state = gp.gp_step(inst, phi, 0.2)
+            phi = state.phi
+            costs.append(float(state.cost))
+        return phi, costs
+
+    phi_bit, costs_bit = run_steps()
+    monkeypatch.setattr(
+        ops, "blocked_tagged",
+        lambda route, improper, **kw: bset.tagged_scan_dense(route, improper))
+    phi_scan, costs_scan = run_steps()
+    assert costs_bit == costs_scan
+    np.testing.assert_array_equal(np.asarray(phi_bit.e), np.asarray(phi_scan.e))
+
+
+# ---------------------------------------------------------------------------
+# (b) batched baselines == serial baselines
+# ---------------------------------------------------------------------------
+
+_KW = dict(alpha=0.1, max_iters=30, tol=-1.0, patience=10**6)
+
+
+def _fig5_scenarios(names):
+    return [sc for sc in scenarios.expand("fig5") if sc.label in names]
+
+
+@pytest.mark.parametrize("solver", ["SPOC", "LCOF"])
+def test_batched_baselines_match_serial_small_table_ii(solver):
+    fam = _fig5_scenarios(scenarios.SMALL_TABLE_II)
+    assert len(fam) == 6
+    masks_fn = baselines.BASELINE_MASKS[solver]
+    bat = scenarios.run_sweep(fam, masks_fn=masks_fn, **_KW)
+    ser = scenarios.run_sweep_serial(fam, masks_fn=masks_fn, **_KW)
+    for sc, b, s in zip(fam, bat.results, ser.results):
+        rel = abs(b.final_cost - s.final_cost) / max(abs(s.final_cost), 1e-9)
+        assert rel <= 1e-4, (solver, sc.label, b.final_cost, s.final_cost)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solver", ["SPOC", "LCOF"])
+def test_batched_baselines_match_serial_small_world(solver):
+    """The V=100 pair (sw-linear, sw-queue) — separate cost families, so
+    run_sweep puts each in its own padded batch."""
+    fam = _fig5_scenarios(("sw-linear", "sw-queue"))
+    kw = dict(_KW, max_iters=12)
+    masks_fn = baselines.BASELINE_MASKS[solver]
+    bat = scenarios.run_sweep(fam, masks_fn=masks_fn, **kw)
+    ser = scenarios.run_sweep_serial(fam, masks_fn=masks_fn, **kw)
+    assert bat.n_batches == 2
+    for sc, b, s in zip(fam, bat.results, ser.results):
+        rel = abs(b.final_cost - s.final_cost) / max(abs(s.final_cost), 1e-9)
+        assert rel <= 1e-4, (solver, sc.label, b.final_cost, s.final_cost)
+
+
+def test_spoc_all_true_allowed_c_equals_pre_refactor_none():
+    """The mask refactor's one behavioral delta: serial SPOC used to pass
+    ``allowed_c=None`` (unrestricted); it now passes the all-True array
+    from ``spoc_masks`` so the restriction batches.  The two must produce
+    identical solves — this pins the pre-refactor behavior."""
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=2.0)
+    ae, ac, phi0 = baselines.spoc_masks(inst)
+    assert bool(ac.all())
+    with_none = gp.solve(inst, phi0, allowed_e=ae, allowed_c=None, **_KW)
+    with_mask = gp.solve(inst, phi0, allowed_e=ae, allowed_c=ac, **_KW)
+    assert with_mask.iterations == with_none.iterations
+    np.testing.assert_allclose(np.asarray(with_mask.cost_history),
+                               np.asarray(with_none.cost_history), rtol=1e-6)
