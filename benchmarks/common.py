@@ -51,6 +51,81 @@ def bench_record(bench: str, *, scenario: str, V: int, solver: str,
     return row
 
 
+# Regression-gate policy (bench_check): a fresh row fails when its metric
+# exceeds MAX_SLOWDOWN x the committed baseline, but only when the pair sits
+# above the noise floor — sub-floor timings on small shared CI boxes are
+# dominated by dispatch jitter, not by the kernels under test.
+MAX_SLOWDOWN = 1.5
+NOISE_FLOOR_S = 2e-4
+
+
+def _row_key(row: dict) -> tuple:
+    return (row.get("bench"), row.get("scenario"), row.get("V"),
+            row.get("solver"))
+
+
+def _pair_metrics(row: dict, ref: dict):
+    """The SAME metric field read from both rows of a baseline/fresh pair:
+    ``s_per_iter`` when both carry it, else ``seconds`` when both carry
+    that — (None, None) when the schemas disagree, so a row that gained or
+    lost ``iters`` between runs is skipped rather than compared
+    apples-to-oranges."""
+    for field in ("s_per_iter", "seconds"):
+        if field in row and field in ref:
+            return row[field], ref[field]
+    return None, None
+
+
+def load_rows(path: str) -> list[dict]:
+    """Rows of a ``BENCH_gp.json``-shaped file ([] if missing/corrupt)."""
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            return json.load(f)["rows"]
+    except (json.JSONDecodeError, KeyError, TypeError):
+        return []
+
+
+def bench_check(baseline_rows: list[dict], fresh_rows: list[dict] | None = None,
+                *, max_slowdown: float = MAX_SLOWDOWN,
+                noise_floor_s: float = NOISE_FLOOR_S) -> list[str]:
+    """Diff freshly generated bench rows against a committed baseline.
+
+    Rows pair up by the ``bench_record`` key (bench, scenario, V, solver);
+    fresh rows with no committed counterpart (new measurements) and
+    baseline rows not regenerated this run are both ignored.  A pair fails
+    when the fresh metric (``s_per_iter`` when both rows carry it, else
+    ``seconds`` — always the same field on both sides, see
+    :func:`_pair_metrics`)
+    exceeds ``max_slowdown`` x max(baseline metric, noise floor) AND the
+    fresh metric itself sits above the noise floor.  Returns human-readable
+    failure lines (empty = gate passes) — the CI ``bench-smoke`` job runs
+    this via ``python -m benchmarks.common --check <committed-baseline>``
+    after ``kernel_bench --smoke`` regenerates the kernel rows.
+    """
+    if fresh_rows is None:
+        fresh_rows = load_rows(BENCH_PATH)
+    base = {_row_key(r): r for r in baseline_rows}
+    failures = []
+    for row in fresh_rows:
+        ref = base.get(_row_key(row))
+        if ref is None:
+            continue
+        m_new, m_old = _pair_metrics(row, ref)
+        if m_new is None or m_old is None:
+            continue
+        if m_new <= noise_floor_s:
+            continue
+        limit = max_slowdown * max(float(m_old), noise_floor_s)
+        if float(m_new) > limit:
+            failures.append(
+                f"{'/'.join(str(k) for k in _row_key(row))}: "
+                f"{float(m_new):.6f}s vs committed {float(m_old):.6f}s "
+                f"(> {max_slowdown:.2f}x)")
+    return failures
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """The harness contract: ``name,us_per_call,derived`` CSV lines."""
     print(f"{name},{us_per_call:.1f},{derived}")
@@ -95,3 +170,40 @@ def result_row(res) -> dict:
 def speedup_report(serial_s: float, batched_s: float, n: int) -> str:
     return (f"serial:{serial_s:.2f}s|batched:{batched_s:.2f}s|"
             f"speedup:{serial_s / max(batched_s, 1e-9):.2f}x|n:{n}")
+
+
+def _check_main(argv: list[str]) -> int:
+    """``python -m benchmarks.common --check <baseline.json>`` — the CI gate."""
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="benchmarks.common")
+    ap.add_argument("--check", required=True,
+                    help="committed BENCH_gp.json snapshot to diff against")
+    ap.add_argument("--fresh", default=BENCH_PATH,
+                    help="freshly generated rows (default: BENCH_gp.json)")
+    ap.add_argument("--max-slowdown", type=float, default=MAX_SLOWDOWN)
+    args = ap.parse_args(argv)
+    baseline = load_rows(args.check)
+    fresh = load_rows(args.fresh)
+    if not baseline or not fresh:
+        print(f"bench_check: nothing to compare "
+              f"({len(baseline)} baseline rows, {len(fresh)} fresh rows)")
+        return 0
+    failures = bench_check(baseline, fresh, max_slowdown=args.max_slowdown)
+    compared = len({_row_key(r) for r in fresh}
+                   & {_row_key(r) for r in baseline})
+    if failures:
+        print(f"bench_check: {len(failures)} regression(s) over "
+              f"{compared} compared row(s):")
+        for line in failures:
+            print(f"  REGRESSION {line}")
+        return 1
+    print(f"bench_check: OK ({compared} rows within "
+          f"{args.max_slowdown:.2f}x of committed)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(_check_main(sys.argv[1:]))

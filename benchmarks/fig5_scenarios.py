@@ -27,7 +27,7 @@ from __future__ import annotations
 from benchmarks.common import (
     Timer, bench_record, emit, save_json, speedup_report,
 )
-from repro.core import baselines, scenarios
+from repro.core import baselines, network, scenarios
 
 GP_ITERS = 250
 ENSEMBLE_SEEDS = 32
@@ -114,6 +114,58 @@ def run_baseline_speedup(iters: int = GP_ITERS) -> dict:
     return out
 
 
+def run_sw_warmstart(iters: int = GP_ITERS) -> dict:
+    """Incremental-rate warm start on the congested V=100 small-world pair.
+
+    The fig5 table solves sw-linear / sw-queue cold at their target rate for
+    ``iters`` iterations each — the dominant wall-clock of the whole driver.
+    Here each member instead climbs a two-rung rate ladder (half rate, then
+    target) with ``scenarios.run_sweep_chained`` threading phi between
+    rungs, and we report the target-rate iteration/wall-clock cut vs the
+    cold solve (both warmed; rows land in BENCH_gp.json).
+    """
+    out = {}
+    kw = dict(alpha=0.1, max_iters=iters)
+    for name in ("sw-linear", "sw-queue"):
+        rate = scenarios.FIG5_RATE[name]
+        rungs = [
+            scenarios.Scenario(
+                label=f"{name}@x{s:g}",
+                instance=network.table_ii_instance(
+                    name, seed=0, rate_scale=s * rate),
+                meta={"table_ii": name, "rate_scale": s * rate})
+            for s in (0.5, 1.0)
+        ]
+        # warm the (single) program shape, then time cold vs chained
+        scenarios.run_sweep_serial(rungs[-1:], **kw)
+        with Timer() as t:
+            cold = scenarios.run_sweep_serial(rungs[-1:], **kw)
+        t_cold = t.seconds
+        with Timer() as t:
+            warm = scenarios.run_sweep_chained(rungs, **kw)
+        t_warm = t.seconds
+        it_cold = int(cold.results[0].iterations)
+        it_target = int(warm.results[-1].iterations)
+        it_total = sum(int(r.iterations) for r in warm.results)
+        rel = ((warm.results[-1].final_cost - cold.results[0].final_cost)
+               / max(abs(cold.results[0].final_cost), 1e-9))
+        out[name] = {
+            "cold_seconds": t_cold, "chained_seconds": t_warm,
+            "cold_iters": it_cold, "target_iters": it_target,
+            "chained_iters_total": it_total,
+            "rel_cost_delta": rel,       # negative: warm landed lower
+        }
+        bench_record("fig5", scenario=f"{name}-warmstart", V=100,
+                     solver="GP-chained", seconds=t_warm, iters=it_total,
+                     target_iters=it_target, cold_iters=it_cold)
+        bench_record("fig5", scenario=f"{name}-warmstart", V=100,
+                     solver="GP-cold", seconds=t_cold, iters=it_cold)
+        emit(f"fig5_{name}_warmstart", t_warm * 1e6,
+             f"target_iters:{it_target}|cold_iters:{it_cold}|"
+             f"cold_s:{t_cold:.1f}|rel_cost_delta:{rel:+.2e}")
+    return out
+
+
 def run_ensemble_speedup(n_seeds: int = ENSEMBLE_SEEDS, iters: int = GP_ITERS) -> dict:
     """Batched-vs-serial wall clock on the seed-ensemble sweep (warm)."""
     kw = dict(alpha=0.1, max_iters=iters)
@@ -161,7 +213,9 @@ def main() -> dict:
 
     baseline_speedups = run_baseline_speedup()
     ensemble = run_ensemble_speedup()
+    warmstart = run_sw_warmstart()
     summary = {
+        "sw_warmstart": warmstart,
         "gp_best_everywhere": ok_best,
         "max_gain_vs_lpr_sc": gain_lpr,
         "sw_queue_gain": sw_gap_queue,

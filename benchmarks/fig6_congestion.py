@@ -56,6 +56,32 @@ def main() -> dict:
               for r in curve.values()]
     grows = ratios[-1] > ratios[0]
 
+    # warm-start chaining: solve the rate ladder sequentially, rate r_k
+    # starting from r_{k-1}'s converged phi (scenarios.run_sweep_chained) —
+    # the incremental-rate shortcut the ROADMAP flagged.  Compare against
+    # the (already warm) serial GP reference above.
+    chained = scenarios.run_sweep_chained("fig6-congestion", **kw)
+    it_cold = sum(int(r.iterations) for r in serials["GP"].results)
+    it_warm = sum(int(r.iterations) for r in chained.results)
+    warm_start = {
+        "chained_seconds": chained.seconds,
+        "serial_seconds": serials["GP"].seconds,
+        "chained_iters": it_warm,
+        "serial_iters": it_cold,
+        "iter_cut": 1 - it_warm / max(it_cold, 1),
+        # signed: negative means the warm-started member landed LOWER
+        "max_rel_cost_delta": max(
+            (w.final_cost - c.final_cost) / max(abs(c.final_cost), 1e-9)
+            for w, c in zip(chained.results, serials["GP"].results)),
+    }
+    bench_record("fig6", scenario="abilene-rates", V=11, solver="GP-chained",
+                 seconds=chained.seconds, iters=it_warm, n=len(SCALES),
+                 iters_cold=it_cold)
+    emit("fig6_gp_chained", chained.seconds * 1e6,
+         f"iters:{it_warm}|cold:{it_cold}|"
+         f"iter_cut:{warm_start['iter_cut']:.0%}|"
+         f"serial_s:{serials['GP'].seconds:.2f}")
+
     speedups = {}
     for solver, _ in SOLVERS:
         bat, ser = sweeps[solver], serials[solver]
@@ -81,7 +107,8 @@ def main() -> dict:
 
     save_json("fig6.json", {"curve": curve, "advantage_ratios": ratios,
                             "advantage_grows_with_congestion": grows,
-                            "solver_speedups": speedups})
+                            "solver_speedups": speedups,
+                            "warm_start": warm_start})
     emit("fig6_summary", 0.0,
          "ratios=" + "|".join(f"{r:.2f}" for r in ratios) + f" grows={grows}")
     return curve

@@ -92,13 +92,38 @@ def main():
     rows["ensemble16"] = {"batched_s": bat.seconds, "serial_s": ser.seconds,
                           "speedup": ser.seconds / max(bat.seconds, 1e-9)}
 
-    # shard_map distributed GP (1 host device here; the collective pattern
-    # is what the multi-device dry-run exercises)
+    # shard_map distributed GP on the unified step engine (however many host
+    # devices are present; the collective pattern is what the multi-device
+    # CI job exercises).  Warm once so the row measures solving, not XLA.
     inst = network.table_ii_instance("abilene", seed=0)
-    mesh = compat.make_mesh((1,), ("stage",))
+    n_sh = min(len(jax.devices()), 2)
+    mesh = compat.make_mesh((n_sh,), ("stage",))
+    skw_sh = dict(alpha=0.05, max_iters=30, patience=10**6, tol=0.0)
+    distributed.solve_sharded(inst, mesh, **skw_sh)                    # warm
     with Timer() as t:
-        res = distributed.solve_sharded(inst, mesh, alpha=0.05, max_iters=30)
-    emit("gp_sharded_30iters", t.us, f"final_cost:{float(res.cost_history[-1]):.3f}")
+        res = distributed.solve_sharded(inst, mesh, **skw_sh)
+    emit("gp_sharded_30iters", t.us,
+         f"shards:{n_sh}|final_cost:{float(res.cost_history[-1]):.3f}")
+    bench_record("gp_scaling", scenario="abilene-sharded", V=inst.V,
+                 solver=f"sharded-fused{n_sh}", seconds=t.seconds,
+                 iters=int(res.iterations))
+    rows["sharded"] = {"shards": n_sh, "seconds": t.seconds,
+                       "iters": int(res.iterations)}
+
+    # mesh-composed ensemble: the batch axis vmapped INSIDE each app shard
+    # (scenarios.run_sweep(mesh=...), vmap-of-shard_map — DESIGN.md §14)
+    skw8 = {"n_seeds": 8}
+    scenarios.run_sweep("seed-ensemble", sweep_kwargs=skw8, mesh=mesh, **kw)  # warm
+    msweep = scenarios.run_sweep("seed-ensemble", sweep_kwargs=skw8,
+                                 mesh=mesh, **kw)
+    m_iters = sum(int(r.iterations) for r in msweep.results)
+    emit("gp_ensemble8_mesh", msweep.seconds * 1e6,
+         f"shards:{n_sh}|iters:{m_iters}|n:8")
+    bench_record("gp_scaling", scenario="ensemble8-mesh", V=11,
+                 solver=f"sharded-vmap{n_sh}", seconds=msweep.seconds,
+                 iters=m_iters, n=8)
+    rows["ensemble8_mesh"] = {"shards": n_sh, "seconds": msweep.seconds,
+                              "iters": m_iters}
     save_json("gp_scaling.json", rows)
 
 

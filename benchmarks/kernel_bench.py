@@ -1,8 +1,10 @@
 """Kernel microbenchmarks (interpret mode on CPU; structural numbers —
 real-TPU wall times come from the roofline, not from this host).
 
-``--smoke`` runs only the GP-hot-path kernels (blocked-sets + batched-LU)
-at V=20 and records rows to BENCH_gp.json — the CI ``bench-smoke`` job.
+``--smoke`` runs only the GP hot paths (blocked-sets + batched-LU kernels
+plus the sharded-vs-single step-engine parity) at V=20 and records rows to
+BENCH_gp.json — the CI ``bench-smoke`` job, gated afterwards by
+``benchmarks.common --check`` against the committed rows.
 """
 
 from __future__ import annotations
@@ -130,6 +132,46 @@ def bench_batched_solve_sizes(sizes):
                      solver="looped-lapack", seconds=t_loop / 1e6)
 
 
+def bench_sharded_parity(V: int = 20, iters: int = 12):
+    """Sharded chunked solve (unified step engine under shard_map) vs
+    ``gp.solve`` on one fig5 member: wall time plus the ≤1e-4 cost-history
+    parity the engine contract promises (DESIGN.md §14).  Runs on however
+    many host devices are available (CI's distributed job forces 4 CPU
+    devices; a plain run exercises the 1-shard collective pattern)."""
+    import numpy as np
+
+    from repro.core import compat, distributed, gp, network, scenarios
+
+    by_v = {20: "connected-er", 100: "sw-queue"}
+    name = by_v[V]
+    inst = network.table_ii_instance(
+        name, seed=0, rate_scale=scenarios.FIG5_RATE[name])
+    phi0 = gp.init_phi(inst)
+    kw = dict(alpha=0.1, max_iters=iters, patience=10**6, tol=0.0)
+    n = min(len(jax.devices()), 2)
+    mesh = compat.make_mesh((n,), ("stage",))
+    gp.solve(inst, phi0, **kw)                                  # warm
+    distributed.solve_sharded(inst, mesh, phi0=phi0, **kw)      # warm
+    with Timer() as t:
+        ref = gp.solve(inst, phi0, **kw)
+    t_single = t.us
+    with Timer() as t:
+        res = distributed.solve_sharded(inst, mesh, phi0=phi0, **kw)
+    t_shard = t.us
+    a = np.asarray(ref.cost_history, dtype=np.float64)
+    b = np.asarray(res.cost_history, dtype=np.float64)
+    dev = float(np.max(np.abs(a - b) / np.maximum(np.abs(a), 1e-9)))
+    assert dev <= 1e-4, f"sharded GP diverged from gp.solve: {dev:.2e}"
+    emit(f"gp_sharded_V{V}", t_shard,
+         f"fig5:{name}|shards:{n}|single:{t_single:.0f}us|"
+         f"cost_dev:{dev:.2e}")
+    bench_record("kernel_bench", scenario=f"sharded_step:{name}", V=V,
+                 solver=f"sharded{n}", seconds=t_shard / 1e6, iters=iters,
+                 cost_dev=dev)
+    bench_record("kernel_bench", scenario=f"sharded_step:{name}", V=V,
+                 solver="single", seconds=t_single / 1e6, iters=iters)
+
+
 def bench_gp_solver_parity():
     """End-to-end GP on a fig5 member: batched-LU stage solver vs the seed
     dense path — wall time and final-cost parity (acceptance: <= 1e-5)."""
@@ -176,6 +218,7 @@ def smoke():
     """CI bench-smoke: GP-hot-path kernels only, V=20, interpret-safe."""
     bench_blocked_sets(sizes=(20,))
     bench_batched_solve_sizes((20,))
+    bench_sharded_parity(V=20)
 
 
 def main():
@@ -220,6 +263,8 @@ def main():
     # blocked-set propagation: bitset kernel vs the dense V-sweep scan
     bench_blocked_sets()
     bench_gp_solver_parity()
+    # unified step engine under shard_map vs the single-device chunked solve
+    bench_sharded_parity()
 
 
 if __name__ == "__main__":

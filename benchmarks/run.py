@@ -7,6 +7,7 @@
   kernel_bench     — Pallas kernels vs jnp oracles (interpret mode)
   roofline         — deliverable (g): per (arch x shape) roofline terms from
                      the dry-run artifacts (run launch/dryrun.py first)
+  perf_compare     — before/after roofline terms per dry-run hillclimb pair
 
 Prints ``name,us_per_call,derived`` CSV.  Use --only <name> for one section.
 """

@@ -14,41 +14,68 @@ is the network-wide flow measurement:
 This mirrors the paper's measurement model exactly: every node measures the
 *total* F_ij and G_i on its links/CPU (an implicit all-reduce over flows in
 the real network), while the per-stage marginal broadcast stays within the
-application's owner device.
+application's owner device.  Per-iteration collective volume: 2 x (V^2 + V)
+floats per ladder rung — independent of |A| and |S| — matching the paper's
+claim that control overhead scales with the network size, not the task
+count.
 
-Per-iteration collective volume: 2 x (V^2 + V) floats — independent of |A|
-and |S| — matching the paper's claim that control overhead scales with the
-network size, not the task count.
+This module contains NO GP-step math of its own: it is a mesh adapter over
+the ONE shared step core (:mod:`repro.core.engine`, DESIGN.md §14).  The
+engine's ``scan_chunk`` — identical to the one ``gp.solve`` jits — is traced
+inside ``shard_map`` with ``axis`` bound to the app-shard mesh axis, so the
+mesh path runs the same fused kernels (batched-LU stage factors, fused
+chain sweeps, bitset blocked sets, the stepsize ladder) and the host loop
+reads back only the ``done`` latch once per chunk, exactly like the
+single-device chunked driver.
+
+Two entry points:
+
+  * :func:`solve_sharded`          — one Instance, apps sharded over the mesh.
+  * :func:`solve_sharded_batched`  — a ``batch.pad_instances`` family; the
+    member axis is vmapped INSIDE each shard (vmap-of-shard_map), so a
+    scenario sweep composes the §9/§10 batch machinery with the mesh
+    (``scenarios.run_sweep(mesh=...)``).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import compat, costs, gp
-from repro.core.marginals import BIG
+from repro.core import compat, engine, gp
 from repro.core.network import Instance
-from repro.core.traffic import (
-    Phi, comp_marginals, link_marginals, renormalize, stage_traffic,
-)
-from repro.core.marginals import pdt_recursion
+from repro.core.traffic import Phi
+
+# Host reads the done latch once per chunk, at the same cadence as
+# gp.solve — one source of truth so the two drivers' chunk-length cache
+# keys stay aligned.
+_CHUNK = gp._SOLVE_CHUNK
 
 
-def _pad_apps(inst: Instance, n_shards: int) -> tuple[Instance, int]:
-    """Pad the application axis to a multiple of n_shards with zero apps."""
-    A = inst.A
+def _pad_apps(inst: Instance, n_shards: int, *, batched: bool = False
+              ) -> tuple[Instance, int]:
+    """Pad the application axis to a multiple of n_shards with dead apps.
+
+    Dead apps carry zero rate and an all-False ``stage_mask``, so they are
+    degenerate everywhere (§9 invariants) and contribute exactly nothing to
+    the measured F/G.  ``batched=True`` pads axis 1 of a stacked
+    ``pad_instances`` pytree instead of axis 0.
+    """
+    ax = 1 if batched else 0
+    A = int(inst.L.shape[ax])
     A_pad = -(-A // n_shards) * n_shards
     if A_pad == A:
         return inst, A
     pad = A_pad - A
 
     def padA(x, fill=0):
-        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        widths = [(0, 0)] * x.ndim
+        widths[ax] = (0, pad)
         return jnp.pad(x, widths, constant_values=fill)
 
     return dataclasses.replace(
@@ -62,90 +89,167 @@ def _pad_apps(inst: Instance, n_shards: int) -> tuple[Instance, int]:
     ), A
 
 
-def sharded_gp_step(mesh: Mesh, inst_template: Instance, axis: str = "stage"):
-    """Build a shard_mapped GP iteration with applications sharded on `axis`.
+def _pad_tree_apps(tree, A_pad: int, *, batched: bool = False):
+    """Zero-pad the app axis of a Phi / mask pytree to ``A_pad`` entries."""
+    ax = 1 if batched else 0
+    if tree is None:
+        return None
 
-    The Instance is decomposed into per-application (sharded) arrays and
-    network-level (replicated) arrays to keep shard_map specs simple; the
-    local Instance is reassembled inside each shard.
+    def padA(x):
+        pad = A_pad - x.shape[ax]
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[ax] = (0, pad)
+        return jnp.pad(x, widths)
+
+    return jax.tree_util.tree_map(padA, tree)
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_program(mesh: Mesh, axis: str, link_kind: int, comp_kind: int,
+                   length: int, scaled: bool, solver: str, blocked: str,
+                   has_masks: bool):
+    """Build the jitted shard_map'd chunk for one (mesh, config) combination.
+
+    The stacked Instance is decomposed into per-application (app-sharded)
+    and network-level (replicated) arrays so the shard_map specs stay
+    simple; each shard reassembles its local Instance, vmaps
+    :func:`engine.scan_chunk` over the member axis, and the ``axis``-bound
+    psum/pmax collectives inside the engine provide the network-wide
+    measurement.  Cached so each chunk length compiles once per mesh.
     """
-    link_kind, comp_kind = inst_template.link_kind, inst_template.comp_kind
-    app = P(axis)
+    app = P(None, axis)     # (B, A, ...): member axis plain, apps sharded
     rep = P()
 
-    def step(L, w, r, dst, n_tasks, stage_mask,          # sharded over apps
-             adj, link_param, comp_param, wnode,         # replicated
-             phi_e, phi_c, alpha):
-        inst_l = Instance(
-            adj=adj, link_param=link_param, link_kind=link_kind,
-            comp_param=comp_param, comp_kind=comp_kind,
-            L=L, w=w, wnode=wnode, r=r, dst=dst, n_tasks=n_tasks,
-            stage_mask=stage_mask,
-        )
-        phi = Phi(e=phi_e, c=phi_c)
+    def chunk(L, w, r, dst, n_tasks, stage_mask,          # app-sharded
+              adj, link_param, comp_param, wnode,         # replicated
+              phi_e, phi_c,                               # app-sharded carry
+              best_cost, stall, done, iters, cost, residual,
+              alpha, tol, patience, max_iters, *masks):
 
-        # --- local traffic for this shard's applications ---
-        t, g = stage_traffic(inst_l, phi)
-        f = t[..., None] * phi.e
-        F_local = jnp.einsum("ak,akij->ij", L, f)
-        G_local = jnp.einsum("ak,aki->i", w, g) * wnode
+        def one(L, w, r, dst, n_tasks, stage_mask, adj, link_param,
+                comp_param, wnode, phi_e, phi_c, best_cost, stall, done,
+                iters, cost, residual, ae, ac):
+            inst_l = Instance(
+                adj=adj, link_param=link_param, link_kind=link_kind,
+                comp_param=comp_param, comp_kind=comp_kind,
+                L=L, w=w, wnode=wnode, r=r, dst=dst, n_tasks=n_tasks,
+                stage_mask=stage_mask,
+            )
+            carry = engine.ScanCarry(
+                phi=Phi(e=phi_e, c=phi_c), best_cost=best_cost, stall=stall,
+                done=done, iters=iters, cost=cost, residual=residual,
+            )
+            carry, (cs, rs) = engine.scan_chunk(
+                inst_l, carry, alpha, tol, patience, max_iters, ae, ac,
+                length=length, scaled=scaled, solver=solver, blocked=blocked,
+                axis=axis,
+            )
+            return (carry.phi.e, carry.phi.c, carry.best_cost, carry.stall,
+                    carry.done, carry.iters, carry.cost, carry.residual,
+                    cs, rs)
 
-        # --- the network-wide measurement: all-reduce over app shards ---
-        F = jax.lax.psum(F_local, axis)
-        G = jax.lax.psum(G_local, axis)
+        ae, ac = masks if has_masks else (None, None)
+        in_axes = (0,) * 18 + ((0, 0) if has_masks else (None, None))
+        return jax.vmap(one, in_axes=in_axes)(
+            L, w, r, dst, n_tasks, stage_mask, adj, link_param, comp_param,
+            wnode, phi_e, phi_c, best_cost, stall, done, iters, cost,
+            residual, ae, ac)
 
-        Dp = link_marginals(inst_l, F)
-        Cp = comp_marginals(inst_l, G)
-
-        # --- per-stage marginal broadcast stays local ---
-        pdt = pdt_recursion(inst_l, phi, Dp, Cp)
-        delta_e = L[:, :, None, None] * Dp[None, None] + pdt[:, :, None, :]
-        delta_e = jnp.where(adj[None, None], delta_e, BIG)
-        pdt_next = jnp.concatenate([pdt[:, 1:], jnp.zeros_like(pdt[:, :1])], axis=1)
-        delta_c = w[:, :, None] * wnode[None, None] * Cp[None, None] + pdt_next
-        delta_c = jnp.where(inst_l.cpu_allowed()[:, :, None], delta_c, BIG)
-
-        # --- blocked sets + projection update (all local) ---
-        avail_e = adj[None, None] & ~gp.blocked_sets(inst_l, phi, pdt)
-        de = jnp.where(avail_e, delta_e, BIG)
-        dc = delta_c
-        min_delta = jnp.minimum(de.min(-1), dc)
-        stuck = min_delta >= BIG / 2
-        de = jnp.where(stuck[..., None], jnp.where(adj[None, None], delta_e, BIG), de)
-        min_delta = jnp.minimum(de.min(-1), dc)
-
-        e_e, e_c = de - min_delta[..., None], dc - min_delta
-        is_min_e = (e_e <= 1e-6) & (de < BIG / 2)
-        is_min_c = (e_c <= 1e-6) & (dc < BIG / 2)
-        N = is_min_e.sum(-1) + is_min_c
-        red_e = jnp.where(de >= BIG / 2, phi.e,
-                          jnp.where(is_min_e, 0.0, jnp.minimum(phi.e, alpha * e_e)))
-        red_c = jnp.where(dc >= BIG / 2, phi.c,
-                          jnp.where(is_min_c, 0.0, jnp.minimum(phi.c, alpha * e_c)))
-        share = (red_e.sum(-1) + red_c) / jnp.maximum(N, 1)
-        new_phi = renormalize(
-            inst_l,
-            Phi(e=phi.e - red_e + share[..., None] * is_min_e,
-                c=phi.c - red_c + share * is_min_c),
-        )
-
-        D_links = jnp.where(adj, costs.cost(link_kind, F, link_param), 0.0)
-        C_nodes = costs.cost(comp_kind, G, comp_param)
-        cost = jnp.sum(D_links) + jnp.sum(C_nodes)
-
-        exc_e = jnp.where(phi.e > 1e-6, delta_e - min_delta[..., None], 0.0)
-        exc_c = jnp.where(phi.c > 1e-6, delta_c - min_delta, 0.0)
-        residual = jax.lax.pmax(jnp.maximum(jnp.max(exc_e), jnp.max(exc_c)), axis)
-        return new_phi.e, new_phi.c, cost, residual
-
-    smapped = compat.shard_map(
-        step,
-        mesh=mesh,
-        in_specs=(app, app, app, app, app, app, rep, rep, rep, rep, app, app, rep),
-        out_specs=(app, app, rep, rep),
-        check=False,
-    )
+    in_specs = ((app,) * 6 + (rep,) * 4 + (app, app) + (rep,) * 6
+                + (rep,) * 4 + ((app, app) if has_masks else ()))
+    out_specs = (app, app) + (rep,) * 6 + (rep, rep)
+    smapped = compat.shard_map(chunk, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check=False)
     return jax.jit(smapped)
+
+
+def solve_sharded_batched(
+    binst: Instance,
+    mesh: Mesh,
+    *,
+    axis: str = "stage",
+    alpha: float = 0.02,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    patience: int = 40,
+    phi0: Phi | None = None,
+    allowed_e: jnp.ndarray | None = None,
+    allowed_c: jnp.ndarray | None = None,
+    scaled: bool = False,
+    solver: str = "auto",
+    blocked: str = "bitset",
+) -> gp.GPScan:
+    """Solve a padded scenario family with applications sharded over `axis`.
+
+    ``binst`` is a ``batch.pad_instances`` pytree (leading member axis B);
+    inside each shard the member axis is vmapped over the SAME chunked
+    done-latch scan ``gp.solve`` runs (``engine.scan_chunk``), so large
+    ensembles spread their per-member app slabs across the mesh while the
+    host reads back only the batched ``done`` latch once per ``_CHUNK``
+    iterations.  No convergence compaction on this path (members stay in
+    their mesh lanes); histories follow the dense :class:`gp.GPScan`
+    contract.  ``solver=``/``blocked=`` dispatch exactly as in ``gp.solve``.
+    """
+    n_shards = mesh.shape[axis]
+    B = int(binst.adj.shape[0])
+    binst_p, A_orig = _pad_apps(binst, n_shards, batched=True)
+    A_pad = int(binst_p.L.shape[1])
+    if phi0 is None:
+        phi0 = jax.vmap(gp.init_phi)(binst_p)
+    else:
+        phi0 = _pad_tree_apps(phi0, A_pad, batched=True)
+    allowed_e = _pad_tree_apps(allowed_e, A_pad, batched=True)
+    allowed_c = _pad_tree_apps(allowed_c, A_pad, batched=True)
+    has_masks = allowed_e is not None or allowed_c is not None
+    if has_masks and (allowed_e is None or allowed_c is None):
+        raise ValueError("pass both allowed_e and allowed_c, or neither")
+
+    carry = jax.vmap(engine.init_carry)(binst_p, phi0)
+    alpha_, tol_ = jnp.float32(alpha), jnp.float32(tol)
+    patience_, max_iters_ = jnp.int32(patience), jnp.int32(max_iters)
+
+    cost_hist = np.zeros((B, max_iters + 1), np.float32)
+    cost_hist[:, 0] = np.asarray(carry.cost)
+    res_hist = np.zeros((B, max_iters), np.float32)
+
+    c = carry
+    steps = 0
+    while steps < max_iters:
+        length = min(_CHUNK, max_iters - steps)
+        fn = _chunk_program(mesh, axis, binst_p.link_kind, binst_p.comp_kind,
+                            length, scaled, solver, blocked, has_masks)
+        mask_args = (allowed_e, allowed_c) if has_masks else ()
+        (phi_e, phi_c, best, stall, done, iters, cost, residual, cs, rs
+         ) = fn(binst_p.L, binst_p.w, binst_p.r, binst_p.dst,
+                binst_p.n_tasks, binst_p.stage_mask, binst_p.adj,
+                binst_p.link_param, binst_p.comp_param, binst_p.wnode,
+                c.phi.e, c.phi.c, c.best_cost, c.stall, c.done, c.iters,
+                c.cost, c.residual, alpha_, tol_, patience_, max_iters_,
+                *mask_args)
+        c = engine.ScanCarry(phi=Phi(e=phi_e, c=phi_c), best_cost=best,
+                             stall=stall, done=done, iters=iters, cost=cost,
+                             residual=residual)
+        cost_hist[:, steps + 1: steps + 1 + length] = np.asarray(cs)
+        res_hist[:, steps: steps + length] = np.asarray(rs)
+        steps += length
+        if bool(np.asarray(done).all()):
+            break
+
+    # dense-history contract: repeat converged values past the last chunk
+    cost_hist[:, steps + 1:] = cost_hist[:, steps: steps + 1]
+    if steps > 0:
+        res_hist[:, steps:] = res_hist[:, steps - 1: steps]
+
+    phi = Phi(e=jnp.asarray(np.asarray(c.phi.e)[:, :A_orig]),
+              c=jnp.asarray(np.asarray(c.phi.c)[:, :A_orig]))
+    return gp.GPScan(
+        phi=phi, cost=c.cost, residual=c.residual,
+        cost_history=jnp.asarray(cost_hist),
+        residual_history=jnp.asarray(res_hist),
+        iterations=c.iters,
+    )
 
 
 def solve_sharded(
@@ -156,32 +260,33 @@ def solve_sharded(
     alpha: float = 0.02,
     max_iters: int = 300,
     tol: float = 1e-4,
+    patience: int = 40,
     phi0: Phi | None = None,
+    allowed_e: jnp.ndarray | None = None,
+    allowed_c: jnp.ndarray | None = None,
+    scaled: bool = False,
+    solver: str = "auto",
+    blocked: str = "bitset",
 ) -> gp.GPResult:
-    """Run GP with applications sharded across a device mesh axis."""
-    n_shards = mesh.shape[axis]
-    inst_p, A_orig = _pad_apps(inst, n_shards)
-    phi = phi0 if phi0 is not None else gp.init_phi(inst_p)
+    """Run GP with applications sharded across a device mesh axis.
 
-    step = sharded_gp_step(mesh, inst_p, axis)
-    shard = NamedSharding(mesh, P(axis))
-    phi_e = jax.device_put(phi.e, shard)
-    phi_c = jax.device_put(phi.c, shard)
-
-    cost_hist, res_hist = [], []
-    it = 0
-    for it in range(1, max_iters + 1):
-        phi_e, phi_c, cost, residual = step(
-            inst_p.L, inst_p.w, inst_p.r, inst_p.dst, inst_p.n_tasks,
-            inst_p.stage_mask, inst_p.adj, inst_p.link_param,
-            inst_p.comp_param, inst_p.wnode, phi_e, phi_c, jnp.float32(alpha),
-        )
-        cost_hist.append(float(cost))
-        res_hist.append(float(residual))
-        if float(residual) <= tol:
-            break
-
-    phi_full = Phi(e=jnp.asarray(np.asarray(phi_e)[:A_orig]),
-                   c=jnp.asarray(np.asarray(phi_c)[:A_orig]))
-    return gp.GPResult(phi=phi_full, cost_history=jnp.asarray(cost_hist),
-                       residual_history=jnp.asarray(res_hist), iterations=it)
+    The B=1 member of :func:`solve_sharded_batched`: the same fused step
+    engine ``gp.solve`` runs, traced under ``shard_map`` with the F/G
+    measurement psum-reduced over ``axis`` — cost trajectories match the
+    single-device solve (tests/test_distributed.py asserts ≤1e-4 over
+    ≥2 shards).  Returns a trimmed :class:`gp.GPResult`.
+    """
+    lift = lambda t: jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], t)
+    scan = solve_sharded_batched(
+        lift(inst), mesh, axis=axis, alpha=alpha, max_iters=max_iters,
+        tol=tol, patience=patience,
+        phi0=None if phi0 is None else lift(phi0),
+        allowed_e=None if allowed_e is None else lift(allowed_e),
+        allowed_c=None if allowed_c is None else lift(allowed_c),
+        scaled=scaled, solver=solver, blocked=blocked)
+    member = jax.tree_util.tree_map(lambda x: x[0], scan)
+    return gp.GPResult(
+        phi=member.phi, cost_history=member.cost_history,
+        residual_history=member.residual_history,
+        iterations=int(member.iterations),
+    ).trim()

@@ -1,0 +1,291 @@
+"""One GP step engine: the fused Algorithm-1 iteration, shared by all drivers.
+
+The paper's iteration is node-parallel with exactly ONE network-wide
+coupling: the measured total link flows ``F_ij`` and workloads ``G_i``.
+This module owns the full fused iteration — stage factorization (one
+batched LU per step, ``traffic.stage_factors``), the fused forward/reverse
+chain sweeps (``ops.fused_chain_solve``), the bitset blocked sets
+(``ops.blocked_tagged``), the blocked-node fallback, the stepsize-ladder
+projection + renormalize, and the cost/residual bookkeeping — and is
+parameterized over how that one measurement is reduced:
+
+  * ``axis=None``   — plain sums over the whole application axis; this is
+                      the single-device path ``gp.gp_step`` / ``gp.solve*``
+                      wrap.
+  * ``axis="name"`` — ``lax.psum`` over the named mesh axis the application
+                      dimension is sharded on; this is the ``shard_map``
+                      path ``distributed.solve_sharded*`` wraps (the paper's
+                      implicit all-reduce of locally measured flows).
+
+Everything except the F/G reduction, the traffic-validity vote and the
+residual max is local to an application shard, so both paths execute the
+same fused kernels and produce matching cost trajectories (DESIGN.md §14,
+tests/test_distributed.py).
+
+``scan_chunk`` is the shared chunked-scan loop body with the on-device
+early-stop latch (DESIGN.md §10); the single-device drivers jit it
+directly, the mesh driver runs it inside ``shard_map`` (optionally under
+``jax.vmap`` for mesh-composed scenario families).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core import traffic as traffic_mod
+from repro.core.marginals import BIG, marginals
+from repro.core.network import Instance
+from repro.core.traffic import (
+    Phi, flows, renormalize, total_cost, traffic_is_valid,
+)
+from repro.kernels import blocked_sets as blocked_sets_mod
+from repro.kernels import ops
+
+TIE_EPS = 1e-6      # directions within this of the min-delta receive mass
+BLOCK_EPS = 1e-7    # strictness slack for pdt comparisons
+
+# Backtracking multipliers tried each iteration (vmapped inside the jitted
+# step).  The paper assumes a "sufficiently small" fixed alpha (Theorem 2 /
+# [11]); with congestion-level queue marginals (D' ~ 1e6 near saturation) a
+# fixed alpha either diverges or crawls, so we evaluate the same projection
+# direction at several stepsizes and keep the best — a monotone-descent
+# safeguard that preserves the convergence argument (descent + stationarity
+# of condition (6)).  Multiplier 0 is included so the cost never increases.
+ALPHA_LADDER = tuple(4.0 ** (1 - k) for k in range(11)) + (0.0,)
+
+
+class GPState(NamedTuple):
+    phi: Phi
+    cost: jnp.ndarray
+    residual: jnp.ndarray    # sufficiency-condition residual (0 => optimal)
+
+
+class ScanCarry(NamedTuple):
+    """Carry of the chunked GP scan (DESIGN.md §10)."""
+
+    phi: Phi
+    best_cost: jnp.ndarray   # float32, monotone-descent tracker
+    stall: jnp.ndarray       # int32, iterations without improvement
+    done: jnp.ndarray        # bool, early-stop latch
+    iters: jnp.ndarray       # int32, #iterations committed so far
+    cost: jnp.ndarray        # float32, last committed cost
+    residual: jnp.ndarray    # float32, last committed residual
+
+
+def _pmax(x: jnp.ndarray, axis: Optional[str]) -> jnp.ndarray:
+    return x if axis is None else jax.lax.pmax(x, axis)
+
+
+# ---------------------------------------------------------------------------
+# Blocked node sets
+# ---------------------------------------------------------------------------
+
+def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray,
+                 method: str = "bitset") -> jnp.ndarray:
+    """(A,K1,V,V) bool: j in B_i(a,k).
+
+    j is blocked for i at stage (a,k) if (Section IV "Blocked node set"):
+      1) (i,j) not in E, or
+      2) dD/dt_j(a,k) > dD/dt_i(a,k), or
+      3) j's routing subtree for (a,k) contains an improper link (p,q)
+         with dD/dt_q > dD/dt_p.
+
+    Category 3 ("tagged" nodes) is a monotone boolean fixed point along the
+    routing DAG.  method="bitset" (default) runs it through the bit-packed
+    kernel — uint32-packed successor words, while-loop frontier early exit
+    at the DAG diameter (kernels/blocked_sets.py, DESIGN.md §13);
+    method="scan" keeps the seed's dense V-sweep ``lax.scan`` as the
+    differential reference (tests/test_blocked_sets.py asserts bit-exact
+    agreement — the early exit stops precisely at the shared fixed point).
+
+    Entirely local to an application shard: the routing DAG of stage (a,k)
+    never couples applications, so the mesh path calls this unchanged.
+    """
+    route = phi.e > 0.0                                         # (A,K1,V,V)
+    worse = pdt[:, :, None, :] > pdt[:, :, :, None] + BLOCK_EPS  # pdt_q > pdt_p
+    improper = route & worse
+
+    if method == "bitset":
+        tagged = ops.blocked_tagged(route, improper)
+    else:
+        tagged = blocked_sets_mod.tagged_scan_dense(route, improper)
+
+    blocked = (~inst.adj[None, None]) | improper | worse | tagged[:, :, None, :]
+    return blocked
+
+
+# ---------------------------------------------------------------------------
+# One GP iteration (eqs. 8-10)
+# ---------------------------------------------------------------------------
+
+def gp_step(
+    inst: Instance,
+    phi: Phi,
+    alpha: float,
+    allowed_e: Optional[jnp.ndarray] = None,
+    allowed_c: Optional[jnp.ndarray] = None,
+    scaled: bool = False,
+    solver: str = "auto",
+    *,
+    blocked: str = "bitset",
+    axis: Optional[str] = None,
+) -> GPState:
+    """One fused GP iteration; ``axis`` selects the F/G reduction (above)."""
+    # One batched LU of every (app, stage) system per iteration: the traffic
+    # sweep solves the transposed systems and the marginal recursion the
+    # plain ones from the SAME factors (traffic.stage_factors, DESIGN.md
+    # §12).  The ladder's candidate evaluations below factor their own
+    # (ladder, A, K1)-stacked batch inside the vmap.  "auto" resolves per
+    # backend/size at trace time (traffic.resolve_solver).
+    solver = traffic_mod.resolve_solver(solver, inst.V)
+    fact = traffic_mod.stage_factors(phi.e) if solver == "batched_lu" else None
+    fl = flows(inst, phi, fact, solver=solver, axis=axis)
+    m = marginals(inst, phi, fl, fact, solver=solver)
+
+    avail_e = inst.adj[None, None] & ~blocked_sets(inst, phi, m.pdt,
+                                                   method=blocked)
+    if allowed_e is not None:
+        avail_e = avail_e & allowed_e
+    avail_c = inst.cpu_allowed()[:, :, None]
+    if allowed_c is not None:
+        avail_c = avail_c & allowed_c
+
+    delta_e = jnp.where(avail_e, m.delta_e, BIG)
+    delta_c = jnp.where(avail_c, m.delta_c, BIG)
+    min_delta = jnp.minimum(delta_e.min(-1), delta_c)           # (A,K1,V)
+
+    # Fallback guard: if blocking removed every direction at a row that must
+    # forward (can happen transiently on congested iterates), fall back to
+    # the unblocked-by-topology direction set for that row.
+    stuck = min_delta >= BIG / 2
+    fb_e = jnp.where(inst.adj[None, None] & (allowed_e if allowed_e is not None else True), m.delta_e, BIG)
+    fb_c = jnp.where(inst.cpu_allowed()[:, :, None] & (allowed_c if allowed_c is not None else True), m.delta_c, BIG)
+    delta_e = jnp.where(stuck[..., None], fb_e, delta_e)
+    delta_c = jnp.where(stuck, fb_c, delta_c)
+    min_delta = jnp.minimum(delta_e.min(-1), delta_c)
+
+    e_e = delta_e - min_delta[..., None]                        # e_ij >= 0
+    e_c = delta_c - min_delta
+    if scaled:
+        # quasi-Newton diagonal scaling (the second-order speedup the paper
+        # attributes to [5]): normalize the projection step by a curvature
+        # surrogate so stepsizes are comparable across congestion levels.
+        # D'' of the M/M/1 cost ~ 2 D'/(cap-F) ~ D'^2-scale; we use the
+        # per-row marginal magnitude as the diagonal preconditioner.
+        scale_row = jnp.maximum(jnp.abs(min_delta), 1e-6)
+        e_e = e_e / scale_row[..., None]
+        e_c = e_c / scale_row
+
+    is_min_e = (e_e <= TIE_EPS) & (delta_e < BIG / 2)
+    is_min_c = (e_c <= TIE_EPS) & (delta_c < BIG / 2)
+    N = is_min_e.sum(-1) + is_min_c                             # (A,K1,V)
+
+    # reductions: blocked directions surrender everything; positive-e
+    # directions surrender min(phi, alpha * e)   (eq. 9)
+    def apply(a):
+        red_e = jnp.where(
+            delta_e >= BIG / 2, phi.e,
+            jnp.where(is_min_e, 0.0, jnp.minimum(phi.e, a * e_e)),
+        )
+        red_c = jnp.where(
+            delta_c >= BIG / 2, phi.c,
+            jnp.where(is_min_c, 0.0, jnp.minimum(phi.c, a * e_c)),
+        )
+        share = (red_e.sum(-1) + red_c) / jnp.maximum(N, 1)     # (A,K1,V)
+        cand = renormalize(inst, Phi(
+            e=phi.e - red_e + share[..., None] * is_min_e,
+            c=phi.c - red_c + share * is_min_c,
+        ))
+        cand_fl = flows(inst, cand, solver=solver, axis=axis)
+        valid = traffic_is_valid(inst, cand_fl.t, axis=axis)
+        c_links = jnp.where(inst.adj, costs.cost(inst.link_kind, cand_fl.F, inst.link_param), 0.0)
+        c_nodes = costs.cost(inst.comp_kind, cand_fl.G, inst.comp_param)
+        cost = jnp.sum(c_links) + jnp.sum(c_nodes)
+        return cand, jnp.where(valid, cost, jnp.inf)
+
+    ladder = alpha * jnp.asarray(ALPHA_LADDER, dtype=jnp.float32)
+    cands, cand_costs = jax.vmap(apply)(ladder)
+    # a too-aggressive candidate can form a routing loop -> divergent traffic
+    # fixed point -> inf/NaN cost; such candidates must lose the argmin.
+    # cand_costs derive from the psum-reduced F/G, so every shard computes
+    # the identical replicated ladder and picks the same argmin.
+    cand_costs = jnp.where(jnp.isnan(cand_costs), jnp.inf, cand_costs)
+    best = jnp.argmin(cand_costs)
+    new_phi = jax.tree_util.tree_map(lambda x: x[best], cands)
+
+    # residual of sufficiency condition (6) at the *new* iterate, computed
+    # cheaply from the current marginals (exact residual is recomputed by
+    # the caller when it matters)
+    exc_e = jnp.where(phi.e > 1e-6, m.delta_e - min_delta[..., None], 0.0)
+    exc_c = jnp.where(phi.c > 1e-6, m.delta_c - min_delta, 0.0)
+    residual = _pmax(jnp.maximum(jnp.max(exc_e), jnp.max(exc_c)), axis)
+
+    return GPState(phi=new_phi, cost=cand_costs[best], residual=residual)
+
+
+# ---------------------------------------------------------------------------
+# Chunked scan loop body (shared by gp.solve* and distributed.solve_sharded*)
+# ---------------------------------------------------------------------------
+
+def init_carry(inst: Instance, phi: Phi, *, solver: str = "auto",
+               axis: Optional[str] = None) -> ScanCarry:
+    cost0 = jnp.asarray(total_cost(inst, phi, solver=solver, axis=axis),
+                        jnp.float32)
+    return ScanCarry(
+        phi=phi,
+        best_cost=cost0,
+        stall=jnp.int32(0),
+        done=jnp.asarray(False),
+        iters=jnp.int32(0),
+        cost=cost0,
+        residual=jnp.float32(jnp.inf),
+    )
+
+
+def scan_chunk(
+    inst: Instance,
+    carry: ScanCarry,
+    alpha, tol, patience, max_iters,
+    allowed_e: Optional[jnp.ndarray], allowed_c: Optional[jnp.ndarray],
+    *,
+    length: int,
+    scaled: bool = False,
+    solver: str = "auto",
+    blocked: str = "bitset",
+    axis: Optional[str] = None,
+):
+    """Advance the solve by up to ``length`` iterations entirely on device.
+
+    Early-stop is a *mask*, not a break: once ``done`` latches (residual
+    below tol, ladder-stationary for ``patience`` iterations, or the
+    ``max_iters`` budget spent) the carry is frozen and subsequent steps
+    re-emit the converged (cost, residual), keeping history shapes static.
+
+    Not jitted here — the single-device drivers wrap it in ``jax.jit``
+    (``gp._scan_chunk``) and the mesh driver traces it inside
+    ``shard_map`` (``distributed._chunk_program``), where the ``axis``
+    collectives bind to the mesh.
+    """
+
+    def body(c: ScanCarry, _):
+        state = gp_step(inst, c.phi, alpha, allowed_e, allowed_c, scaled,
+                        solver, blocked=blocked, axis=axis)
+        frz = c.done
+        phi = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(frz, old, new), state.phi, c.phi)
+        cost = jnp.where(frz, c.cost, state.cost)
+        residual = jnp.where(frz, c.residual, state.residual)
+        improved = state.cost < c.best_cost * (1 - 1e-6)
+        best = jnp.where(frz | ~improved, c.best_cost, state.cost)
+        stall = jnp.where(frz, c.stall, jnp.where(improved, 0, c.stall + 1))
+        iters = c.iters + jnp.where(frz, 0, 1).astype(jnp.int32)
+        done = frz | (residual <= tol) | (stall >= patience) | (iters >= max_iters)
+        nc = ScanCarry(phi=phi, best_cost=best, stall=stall, done=done,
+                       iters=iters, cost=cost, residual=residual)
+        return nc, (cost, residual)
+
+    return jax.lax.scan(body, carry, None, length=length)

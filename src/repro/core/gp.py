@@ -14,6 +14,14 @@ strategy tensor — jit-compiled, and shard_mappable over stages
 (``core/distributed.py``).  ``allowed_e`` / ``allowed_c`` masks restrict the
 direction set, which is how the SPOC / LCOF baselines reuse this machinery
 (``core/baselines.py``).
+
+The iteration itself lives in :mod:`repro.core.engine` (the ONE fused step
+core, parameterized over the F/G measurement reduction — DESIGN.md §14);
+this module is the single-device driver layer: initial strategies, the
+chunked/vmapped solve drivers, and thin ``axis=None`` wrappers that keep
+the historical ``gp.gp_step`` / ``gp.blocked_sets`` entry points.  The
+mesh drivers (``distributed.solve_sharded*``) consume the same engine
+under ``shard_map``.
 """
 
 from __future__ import annotations
@@ -28,23 +36,17 @@ import numpy as np
 
 from repro.core import batch as batch_mod
 from repro.core import costs
-from repro.core import traffic as traffic_mod
-from repro.kernels import blocked_sets as blocked_sets_mod
-from repro.kernels import ops
-from repro.core.marginals import BIG, Marginals, marginals
+from repro.core import engine
+from repro.core.engine import GPState, ScanCarry as _ScanCarry
 from repro.core.network import Instance
-from repro.core.traffic import (
-    Phi, flows, renormalize, total_cost, traffic_is_valid,
-)
+from repro.core.traffic import Phi, renormalize, total_cost
 
-_TIE_EPS = 1e-6      # directions within this of the min-delta receive mass
-_BLOCK_EPS = 1e-7    # strictness slack for pdt comparisons
-
-
-class GPState(NamedTuple):
-    phi: Phi
-    cost: jnp.ndarray
-    residual: jnp.ndarray    # sufficiency-condition residual (0 => optimal)
+# Historical spellings, re-exported for call sites and differential tests
+# that predate the engine extraction.
+_TIE_EPS = engine.TIE_EPS      # directions within this of min-delta get mass
+_BLOCK_EPS = engine.BLOCK_EPS  # strictness slack for pdt comparisons
+_ALPHA_LADDER = engine.ALPHA_LADDER
+blocked_sets = engine.blocked_sets
 
 
 class GPScan(NamedTuple):
@@ -113,53 +115,8 @@ class GPResult:
 
 
 # ---------------------------------------------------------------------------
-# Blocked node sets
+# One GP iteration (eqs. 8-10) — thin wrapper over the shared step engine
 # ---------------------------------------------------------------------------
-
-def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray,
-                 method: str = "bitset") -> jnp.ndarray:
-    """(A,K1,V,V) bool: j in B_i(a,k).
-
-    j is blocked for i at stage (a,k) if (Section IV "Blocked node set"):
-      1) (i,j) not in E, or
-      2) dD/dt_j(a,k) > dD/dt_i(a,k), or
-      3) j's routing subtree for (a,k) contains an improper link (p,q)
-         with dD/dt_q > dD/dt_p.
-
-    Category 3 ("tagged" nodes) is a monotone boolean fixed point along the
-    routing DAG.  method="bitset" (default) runs it through the bit-packed
-    kernel — uint32-packed successor words, while-loop frontier early exit
-    at the DAG diameter (kernels/blocked_sets.py, DESIGN.md §13);
-    method="scan" keeps the seed's dense V-sweep ``lax.scan`` as the
-    differential reference (tests/test_blocked_sets.py asserts bit-exact
-    agreement — the early exit stops precisely at the shared fixed point).
-    """
-    route = phi.e > 0.0                                         # (A,K1,V,V)
-    worse = pdt[:, :, None, :] > pdt[:, :, :, None] + _BLOCK_EPS  # pdt_q > pdt_p
-    improper = route & worse
-
-    if method == "bitset":
-        tagged = ops.blocked_tagged(route, improper)
-    else:
-        tagged = blocked_sets_mod.tagged_scan_dense(route, improper)
-
-    blocked = (~inst.adj[None, None]) | improper | worse | tagged[:, :, None, :]
-    return blocked
-
-
-# ---------------------------------------------------------------------------
-# One GP iteration (eqs. 8-10)
-# ---------------------------------------------------------------------------
-
-# Backtracking multipliers tried each iteration (vmapped inside the jitted
-# step).  The paper assumes a "sufficiently small" fixed alpha (Theorem 2 /
-# [11]); with congestion-level queue marginals (D' ~ 1e6 near saturation) a
-# fixed alpha either diverges or crawls, so we evaluate the same projection
-# direction at several stepsizes and keep the best — a monotone-descent
-# safeguard that preserves the convergence argument (descent + stationarity
-# of condition (6)).  Multiplier 0 is included so the cost never increases.
-_ALPHA_LADDER = tuple(4.0 ** (1 - k) for k in range(11)) + (0.0,)
-
 
 def gp_step(
     inst: Instance,
@@ -169,94 +126,19 @@ def gp_step(
     allowed_c: Optional[jnp.ndarray] = None,
     scaled: bool = False,
     solver: str = "auto",
+    blocked: str = "bitset",
 ) -> GPState:
-    # One batched LU of every (app, stage) system per iteration: the traffic
-    # sweep solves the transposed systems and the marginal recursion the
-    # plain ones from the SAME factors (traffic.stage_factors, DESIGN.md
-    # §12).  The ladder's candidate evaluations below factor their own
-    # (ladder, A, K1)-stacked batch inside the vmap.  "auto" resolves per
-    # backend/size at trace time (traffic.resolve_solver).
-    solver = traffic_mod.resolve_solver(solver, inst.V)
-    fact = traffic_mod.stage_factors(phi.e) if solver == "batched_lu" else None
-    fl = flows(inst, phi, fact, solver=solver)
-    m = marginals(inst, phi, fl, fact, solver=solver)
+    """One fused GP iteration on a single device.
 
-    avail_e = inst.adj[None, None] & ~blocked_sets(inst, phi, m.pdt)
-    if allowed_e is not None:
-        avail_e = avail_e & allowed_e
-    avail_c = inst.cpu_allowed()[:, :, None]
-    if allowed_c is not None:
-        avail_c = avail_c & allowed_c
-
-    delta_e = jnp.where(avail_e, m.delta_e, BIG)
-    delta_c = jnp.where(avail_c, m.delta_c, BIG)
-    min_delta = jnp.minimum(delta_e.min(-1), delta_c)           # (A,K1,V)
-
-    # Fallback guard: if blocking removed every direction at a row that must
-    # forward (can happen transiently on congested iterates), fall back to
-    # the unblocked-by-topology direction set for that row.
-    stuck = min_delta >= BIG / 2
-    fb_e = jnp.where(inst.adj[None, None] & (allowed_e if allowed_e is not None else True), m.delta_e, BIG)
-    fb_c = jnp.where(inst.cpu_allowed()[:, :, None] & (allowed_c if allowed_c is not None else True), m.delta_c, BIG)
-    delta_e = jnp.where(stuck[..., None], fb_e, delta_e)
-    delta_c = jnp.where(stuck, fb_c, delta_c)
-    min_delta = jnp.minimum(delta_e.min(-1), delta_c)
-
-    e_e = delta_e - min_delta[..., None]                        # e_ij >= 0
-    e_c = delta_c - min_delta
-    if scaled:
-        # quasi-Newton diagonal scaling (the second-order speedup the paper
-        # attributes to [5]): normalize the projection step by a curvature
-        # surrogate so stepsizes are comparable across congestion levels.
-        # D'' of the M/M/1 cost ~ 2 D'/(cap-F) ~ D'^2-scale; we use the
-        # per-row marginal magnitude as the diagonal preconditioner.
-        scale_row = jnp.maximum(jnp.abs(min_delta), 1e-6)
-        e_e = e_e / scale_row[..., None]
-        e_c = e_c / scale_row
-
-    is_min_e = (e_e <= _TIE_EPS) & (delta_e < BIG / 2)
-    is_min_c = (e_c <= _TIE_EPS) & (delta_c < BIG / 2)
-    N = is_min_e.sum(-1) + is_min_c                             # (A,K1,V)
-
-    # reductions: blocked directions surrender everything; positive-e
-    # directions surrender min(phi, alpha * e)   (eq. 9)
-    def apply(a):
-        red_e = jnp.where(
-            delta_e >= BIG / 2, phi.e,
-            jnp.where(is_min_e, 0.0, jnp.minimum(phi.e, a * e_e)),
-        )
-        red_c = jnp.where(
-            delta_c >= BIG / 2, phi.c,
-            jnp.where(is_min_c, 0.0, jnp.minimum(phi.c, a * e_c)),
-        )
-        share = (red_e.sum(-1) + red_c) / jnp.maximum(N, 1)     # (A,K1,V)
-        cand = renormalize(inst, Phi(
-            e=phi.e - red_e + share[..., None] * is_min_e,
-            c=phi.c - red_c + share * is_min_c,
-        ))
-        cand_fl = flows(inst, cand, solver=solver)
-        valid = traffic_is_valid(inst, cand_fl.t)
-        c_links = jnp.where(inst.adj, costs.cost(inst.link_kind, cand_fl.F, inst.link_param), 0.0)
-        c_nodes = costs.cost(inst.comp_kind, cand_fl.G, inst.comp_param)
-        cost = jnp.sum(c_links) + jnp.sum(c_nodes)
-        return cand, jnp.where(valid, cost, jnp.inf)
-
-    ladder = alpha * jnp.asarray(_ALPHA_LADDER, dtype=jnp.float32)
-    cands, cand_costs = jax.vmap(apply)(ladder)
-    # a too-aggressive candidate can form a routing loop -> divergent traffic
-    # fixed point -> inf/NaN cost; such candidates must lose the argmin
-    cand_costs = jnp.where(jnp.isnan(cand_costs), jnp.inf, cand_costs)
-    best = jnp.argmin(cand_costs)
-    new_phi = jax.tree_util.tree_map(lambda x: x[best], cands)
-
-    # residual of sufficiency condition (6) at the *new* iterate, computed
-    # cheaply from the current marginals (exact residual is recomputed by
-    # the caller when it matters)
-    exc_e = jnp.where(phi.e > 1e-6, m.delta_e - min_delta[..., None], 0.0)
-    exc_c = jnp.where(phi.c > 1e-6, m.delta_c - min_delta, 0.0)
-    residual = jnp.maximum(jnp.max(exc_e), jnp.max(exc_c))
-
-    return GPState(phi=new_phi, cost=cand_costs[best], residual=residual)
+    Delegates to :func:`engine.gp_step` with ``axis=None`` (plain-sum F/G
+    measurement).  ``solver`` picks the stage solver (``"auto"`` |
+    ``"batched_lu"`` | ``"dense"``, DESIGN.md §12) and ``blocked`` the
+    blocked-set method (``"bitset"`` | ``"scan"``, DESIGN.md §13); the mesh
+    path (``distributed.solve_sharded``) runs the same engine under
+    ``shard_map`` with ``axis`` bound to the app-shard mesh axis.
+    """
+    return engine.gp_step(inst, phi, alpha, allowed_e, allowed_c, scaled,
+                          solver, blocked=blocked, axis=None)
 
 
 # ---------------------------------------------------------------------------
@@ -358,65 +240,33 @@ def init_phi(inst: Instance) -> Phi:
 #                   as the semantic reference (tests/test_batch.py asserts
 #                   scan == loop on every Table II scenario).
 
-@functools.partial(jax.jit, static_argnames=("scaled", "solver"))
+@functools.partial(jax.jit, static_argnames=("scaled", "solver", "blocked"))
 def _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled=False,
-              solver="auto"):
-    return gp_step(inst, phi, alpha, allowed_e, allowed_c, scaled, solver)
+              solver="auto", blocked="bitset"):
+    return engine.gp_step(inst, phi, alpha, allowed_e, allowed_c, scaled,
+                          solver, blocked=blocked, axis=None)
 
 
-class _ScanCarry(NamedTuple):
-    phi: Phi
-    best_cost: jnp.ndarray   # float32, monotone-descent tracker
-    stall: jnp.ndarray       # int32, iterations without improvement
-    done: jnp.ndarray        # bool, early-stop latch
-    iters: jnp.ndarray       # int32, #iterations committed so far
-    cost: jnp.ndarray        # float32, last committed cost
-    residual: jnp.ndarray    # float32, last committed residual
+_init_carry = engine.init_carry
 
 
-def _init_carry(inst: Instance, phi: Phi) -> _ScanCarry:
-    cost0 = jnp.asarray(total_cost(inst, phi), jnp.float32)
-    return _ScanCarry(
-        phi=phi,
-        best_cost=cost0,
-        stall=jnp.int32(0),
-        done=jnp.asarray(False),
-        iters=jnp.int32(0),
-        cost=cost0,
-        residual=jnp.float32(jnp.inf),
-    )
-
-
-@functools.partial(jax.jit, static_argnames=("length", "scaled", "solver"))
+@functools.partial(jax.jit,
+                   static_argnames=("length", "scaled", "solver", "blocked"))
 def _scan_chunk(
     inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
     *, length: int, scaled: bool = False, solver: str = "auto",
+    blocked: str = "bitset",
 ):
-    """Advance the solve by up to ``length`` iterations entirely on device.
+    """Jitted single-device wrapper over :func:`engine.scan_chunk`.
 
-    Early-stop is a *mask*, not a break: once ``done`` latches (residual
-    below tol, ladder-stationary for ``patience`` iterations, or the
-    ``max_iters`` budget spent) the carry is frozen and subsequent steps
-    re-emit the converged (cost, residual), keeping history shapes static.
+    Early-stop is a *mask*, not a break (see the engine docstring): the
+    ``done`` latch freezes the carry and subsequent steps re-emit the
+    converged (cost, residual), keeping history shapes static.
     """
-
-    def body(c: _ScanCarry, _):
-        state = gp_step(inst, c.phi, alpha, allowed_e, allowed_c, scaled, solver)
-        frz = c.done
-        phi = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(frz, old, new), state.phi, c.phi)
-        cost = jnp.where(frz, c.cost, state.cost)
-        residual = jnp.where(frz, c.residual, state.residual)
-        improved = state.cost < c.best_cost * (1 - 1e-6)
-        best = jnp.where(frz | ~improved, c.best_cost, state.cost)
-        stall = jnp.where(frz, c.stall, jnp.where(improved, 0, c.stall + 1))
-        iters = c.iters + jnp.where(frz, 0, 1).astype(jnp.int32)
-        done = frz | (residual <= tol) | (stall >= patience) | (iters >= max_iters)
-        nc = _ScanCarry(phi=phi, best_cost=best, stall=stall, done=done,
-                        iters=iters, cost=cost, residual=residual)
-        return nc, (cost, residual)
-
-    return jax.lax.scan(body, carry, None, length=length)
+    return engine.scan_chunk(
+        inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
+        length=length, scaled=scaled, solver=solver, blocked=blocked,
+        axis=None)
 
 
 def solve_scan(
@@ -431,6 +281,7 @@ def solve_scan(
     patience: int = 40,
     scaled: bool = False,
     solver: str = "auto",
+    blocked: str = "bitset",
 ) -> GPScan:
     """Algorithm 1 as a single device-resident ``lax.scan``.
 
@@ -462,7 +313,7 @@ def solve_scan(
     carry, (cs, rs) = _scan_chunk(
         inst, carry0, jnp.float32(alpha), jnp.float32(tol),
         jnp.int32(patience), jnp.int32(max_iters), allowed_e, allowed_c,
-        length=max_iters, scaled=scaled, solver=solver,
+        length=max_iters, scaled=scaled, solver=solver, blocked=blocked,
     )
     return GPScan(
         phi=carry.phi, cost=carry.cost, residual=carry.residual,
@@ -500,6 +351,7 @@ def solve(
     patience: int = 40,
     scaled: bool = False,
     solver: str = "auto",
+    blocked: str = "bitset",
 ) -> GPResult:
     """Run Algorithm 1 until the sufficiency residual falls below tol.
 
@@ -523,7 +375,7 @@ def solve(
             inst, carry, alpha_, tol_, patience_, max_iters_,
             allowed_e, allowed_c,
             length=min(_SOLVE_CHUNK, max_iters - steps), scaled=scaled,
-            solver=solver,
+            solver=solver, blocked=blocked,
         )
         cost_chunks.append(cs)
         res_chunks.append(rs)
@@ -538,14 +390,17 @@ def solve(
     ).trim()
 
 
-@functools.partial(jax.jit, static_argnames=("length", "scaled", "solver"))
+@functools.partial(jax.jit,
+                   static_argnames=("length", "scaled", "solver", "blocked"))
 def _scan_chunk_batched(
     inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
     *, length: int, scaled: bool = False, solver: str = "auto",
+    blocked: str = "bitset",
 ):
     def one(i, c, ae, ac):
         return _scan_chunk(i, c, alpha, tol, patience, max_iters, ae, ac,
-                           length=length, scaled=scaled, solver=solver)
+                           length=length, scaled=scaled, solver=solver,
+                           blocked=blocked)
 
     return jax.vmap(one)(inst, carry, allowed_e, allowed_c)
 
@@ -567,6 +422,7 @@ def solve_batched(
     scaled: bool = False,
     compact: bool = True,
     solver: str = "auto",
+    blocked: str = "bitset",
 ) -> GPScan:
     """Solve a whole scenario family (a ``batch.pad_instances`` pytree with
     a leading batch axis) in one vmapped device program.
@@ -656,7 +512,7 @@ def solve_batched(
         chunk = min(chunk * 2, _CHUNK_MAX)
         carry, (cs, rs) = _scan_chunk_batched(
             inst_p, carry, alpha_, tol_, patience_, max_iters_, ae_p, ac_p,
-            length=length, scaled=scaled, solver=solver,
+            length=length, scaled=scaled, solver=solver, blocked=blocked,
         )
         valid = ids >= 0
         vids = ids[valid]
@@ -728,6 +584,7 @@ def solve_loop(
     patience: int = 40,
     scaled: bool = False,
     solver: str = "auto",
+    blocked: str = "bitset",
 ) -> GPResult:
     """Reference driver: the original per-iteration host-sync python loop.
 
@@ -745,7 +602,8 @@ def solve_loop(
     shrink = jnp.float32(1 - 1e-6)
     tol32 = jnp.float32(tol)
     for it in range(1, max_iters + 1):
-        state = _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled, solver)
+        state = _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled,
+                          solver, blocked)
         phi = state.phi
         cost_hist.append(float(state.cost))
         res_hist.append(float(state.residual))

@@ -116,10 +116,18 @@ def marginals(
     fact: Optional[ops.BatchedLU] = None,
     *,
     solver: str = "auto",
+    axis: Optional[str] = None,
 ) -> Marginals:
-    """All marginal quantities for strategy phi."""
+    """All marginal quantities for strategy phi.
+
+    The marginal recursion itself is local to an application shard (stage
+    coupling never crosses applications); only the measured ``F``/``G``
+    inside ``fl`` are network-wide.  Callers under ``shard_map`` either
+    pass a pre-reduced ``fl`` (``core/engine.py`` does) or set ``axis`` so
+    the internally computed flows psum-reduce over the app shards.
+    """
     if fl is None:
-        fl = flows(inst, phi, fact, solver=solver)
+        fl = flows(inst, phi, fact, solver=solver, axis=axis)
     Dp = link_marginals(inst, fl.F)
     Cp = comp_marginals(inst, fl.G)
     pdt = pdt_recursion(inst, phi, Dp, Cp, fact, solver=solver)

@@ -18,9 +18,13 @@ Built-in sweeps:
   * ``mixed-topology``  — heterogeneous Table II topologies in ONE padded
                           batch (exercises the V/A padding invariants)
 
-``run_sweep(name)`` solves a family batched; ``run_sweep_serial(name)``
-solves it one instance at a time through ``gp.solve`` — the pair is how the
-benchmark drivers measure the batched-vs-serial speedup.
+``run_sweep(name)`` solves a family batched (``mesh=`` additionally shards
+each member's application axis over a device mesh — vmap-of-shard_map,
+DESIGN.md §14); ``run_sweep_serial(name)`` solves it one instance at a time
+through ``gp.solve`` — the pair is how the benchmark drivers measure the
+batched-vs-serial speedup.  ``run_sweep_chained(name)`` solves an
+incremental family sequentially, warm-starting each member from its
+predecessor's strategy (the fig6 rate-ladder shortcut).
 """
 
 from __future__ import annotations
@@ -185,6 +189,8 @@ def solve_family(
     phi0s: Optional[Sequence[Phi]] = None,
     *,
     masks_fn: Optional[Callable] = None,
+    mesh=None,
+    mesh_axis: str = "stage",
     **gp_kwargs,
 ) -> list[gp.GPResult]:
     """Solve same-cost-family instances as ONE padded, vmapped batch.
@@ -194,6 +200,12 @@ def solve_family(
     restricted solvers — the SPOC/LCOF baselines — run through the same
     batched device program as unrestricted GP.  An explicit ``phi0s``
     overrides the masks' initial strategies.
+
+    With ``mesh`` set (a ``jax.sharding.Mesh``), the family runs through
+    ``distributed.solve_sharded_batched``: each member's application axis
+    is sharded over ``mesh_axis`` and the member axis is vmapped inside
+    each shard (vmap-of-shard_map, DESIGN.md §14), so large ensembles
+    spread across devices while solving the identical problems.
 
     Returns per-instance trimmed GPResults with padding stripped from phi
     and histories taken from the batched dense scan outputs.
@@ -206,7 +218,13 @@ def solve_family(
         gp_kwargs.setdefault("allowed_c", allowed_c)
         if phi0 is None:
             phi0 = mask_phi0
-    scan = gp.solve_batched(binst, phi0, **gp_kwargs)
+    if mesh is not None:
+        from repro.core import distributed
+
+        scan = distributed.solve_sharded_batched(
+            binst, mesh, axis=mesh_axis, phi0=phi0, **gp_kwargs)
+    else:
+        scan = gp.solve_batched(binst, phi0, **gp_kwargs)
     out = []
     for b, inst in enumerate(insts):
         member = jax.tree_util.tree_map(lambda x: x[b], scan)
@@ -221,6 +239,7 @@ def solve_family(
 
 def run_sweep(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
               masks_fn: Optional[Callable] = None,
+              mesh=None, mesh_axis: str = "stage",
               **gp_kwargs) -> SweepResult:
     """Expand a sweep and solve it batched.
 
@@ -231,6 +250,9 @@ def run_sweep(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
     ``masks_fn`` restricts the direction set per member (the SPOC/LCOF
     baselines — ``baselines.BASELINE_MASKS``); it is evaluated under
     ``jax.vmap`` on each padded group (see :func:`solve_family`).
+    ``mesh`` composes the family with a device mesh: each padded group is
+    solved by ``distributed.solve_sharded_batched`` with the app axis
+    sharded over ``mesh_axis`` and members vmapped inside each shard.
     Returns a :class:`SweepResult` whose ``results`` align 1:1 with
     ``scenarios`` (trimmed GPResults, phi un-padded back to each member's
     true (A, K1, V, V)).
@@ -265,7 +287,8 @@ def run_sweep(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
     t0 = time.perf_counter()
     for idxs in groups.values():
         group_res = solve_family([scenarios[i].instance for i in idxs],
-                                 masks_fn=masks_fn, **gp_kwargs)
+                                 masks_fn=masks_fn, mesh=mesh,
+                                 mesh_axis=mesh_axis, **gp_kwargs)
         for i, r in zip(idxs, group_res):
             results[i] = r
     seconds = time.perf_counter() - t0
@@ -299,6 +322,65 @@ def run_sweep_serial(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
             kw.setdefault("allowed_e", allowed_e)
             kw.setdefault("allowed_c", allowed_c)
         results.append(gp.solve(sc.instance, phi0, **kw))
+    seconds = time.perf_counter() - t0
+    return SweepResult(scenarios=scenarios, results=results, seconds=seconds,
+                       n_batches=len(scenarios))
+
+
+def run_sweep_chained(name_or_scenarios, *,
+                      sweep_kwargs: Optional[dict] = None,
+                      masks_fn: Optional[Callable] = None,
+                      **gp_kwargs) -> SweepResult:
+    """Sequential sweep with warm-start chaining: member k starts from
+    member k-1's converged strategy.
+
+    The intended use is *incremental* families — e.g. the fig6 input-rate
+    ladder, where rate ``r_k``'s optimum is a small perturbation of
+    ``r_{k-1}``'s — so order the scenario list from least to most congested.
+    Chaining is inherently sequential (each member needs its predecessor's
+    phi), so this trades the batched device program for a much shorter
+    iteration count per member; ``benchmarks/fig6_congestion.py`` and the
+    fig5 V=100 warm-start report the measured cut.
+
+    A member that cannot legally inherit its predecessor's strategy —
+    different graph, destinations or chain structure, not just a different
+    array shape (two random topologies can share (A, K1, V, V) while
+    disagreeing on which edges exist, and phi mass on a non-edge poisons
+    the traffic fixed point) — falls back to a cold start.  ``masks_fn``
+    restrictions still apply per member; the chained phi only replaces the
+    *initial* strategy.
+    """
+    import numpy as np
+
+    if isinstance(name_or_scenarios, str):
+        scenarios = expand(name_or_scenarios, **(sweep_kwargs or {}))
+    else:
+        scenarios = list(name_or_scenarios)
+    t0 = time.perf_counter()
+    results: list[gp.GPResult] = []
+    phi_prev: Optional[Phi] = None
+    inst_prev: Optional[network.Instance] = None
+    for sc in scenarios:
+        inst = sc.instance
+        kw = dict(gp_kwargs)
+        phi0 = None
+        if masks_fn is not None:
+            allowed_e, allowed_c, phi0 = masks_fn(inst)
+            kw.setdefault("allowed_e", allowed_e)
+            kw.setdefault("allowed_c", allowed_c)
+        inheritable = (
+            phi_prev is not None
+            and tuple(phi_prev.e.shape) == (inst.A, inst.K1, inst.V, inst.V)
+            and np.array_equal(np.asarray(inst.adj), np.asarray(inst_prev.adj))
+            and np.array_equal(np.asarray(inst.dst), np.asarray(inst_prev.dst))
+            and np.array_equal(np.asarray(inst.n_tasks),
+                               np.asarray(inst_prev.n_tasks))
+        )
+        if inheritable:
+            phi0 = phi_prev
+        res = gp.solve(inst, phi0, **kw)
+        phi_prev, inst_prev = res.phi, inst
+        results.append(res)
     seconds = time.perf_counter() - t0
     return SweepResult(scenarios=scenarios, results=results, seconds=seconds,
                        n_batches=len(scenarios))

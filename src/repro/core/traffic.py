@@ -151,31 +151,62 @@ def flows(
     fact: Optional[ops.BatchedLU] = None,
     *,
     solver: str = "auto",
+    axis: Optional[str] = None,
 ) -> Flows:
-    """All flow quantities induced by strategy phi (Table I)."""
+    """All flow quantities induced by strategy phi (Table I).
+
+    ``axis`` parameterizes the ONE network-wide measurement of the model:
+    total link flows ``F_ij`` and workloads ``G_i`` are sums over *all*
+    applications, so when the application axis is sharded over a mesh axis
+    (core/distributed.py) the local partial sums are all-reduced with
+    ``lax.psum(_, axis)`` — the paper's implicit all-reduce of locally
+    measured flows.  ``axis=None`` (default, single device) keeps the
+    plain einsum sums.  Per-application quantities ``t``/``g``/``f`` stay
+    local to the shard either way.
+    """
     t, g = stage_traffic(inst, phi, fact, solver=solver)
     f = t[..., None] * phi.e                                  # (A,K1,V,V)
     F = jnp.einsum("ak,akij->ij", inst.L, f)
     G = jnp.einsum("ak,aki->i", inst.w, g) * inst.wnode
+    if axis is not None:
+        F = jax.lax.psum(F, axis)
+        G = jax.lax.psum(G, axis)
     return Flows(t=t, g=g, f=f, F=F, G=G)
 
 
-def traffic_is_valid(inst: Instance, t: jnp.ndarray) -> jnp.ndarray:
+def traffic_is_valid(inst: Instance, t: jnp.ndarray, *,
+                     axis: Optional[str] = None) -> jnp.ndarray:
     """Scalar bool: t is a physical (loop-free) traffic solution.
 
     For a loop-free strategy, flow conservation bounds every stage traffic
     by the application's total injected rate; a routing loop makes the
     Neumann series diverge and the linear solve returns values far outside
     that bound (or non-finite).
+
+    Under app sharding (``axis`` names the mesh axis) the bound uses the
+    globally maximal injected rate (``pmax``) and the verdict is the
+    all-shard AND, so the sharded vote matches the single-device check on
+    the full application set.
     """
-    bound = 4.0 * jnp.max(jnp.sum(inst.r, axis=1)) + 1.0
+    rmax = jnp.max(jnp.sum(inst.r, axis=1))
+    if axis is not None:
+        rmax = jax.lax.pmax(rmax, axis)
+    bound = 4.0 * rmax + 1.0
     finite = jnp.all(jnp.isfinite(t))
-    return finite & jnp.all(t > -1e-3) & jnp.all(t < bound)
+    ok = finite & jnp.all(t > -1e-3) & jnp.all(t < bound)
+    if axis is not None:
+        ok = jax.lax.pmax(jnp.where(ok, 0, 1), axis) == 0
+    return ok
 
 
-def total_cost(inst: Instance, phi: Phi) -> jnp.ndarray:
-    """Objective of problem (2): D(phi) = sum D_ij(F_ij) + sum C_i(G_i)."""
-    fl = flows(inst, phi)
+def total_cost(inst: Instance, phi: Phi, *, solver: str = "auto",
+               axis: Optional[str] = None) -> jnp.ndarray:
+    """Objective of problem (2): D(phi) = sum D_ij(F_ij) + sum C_i(G_i).
+
+    With ``axis`` set, F/G are psum-reduced over the app shards first, so
+    every shard returns the identical replicated global objective.
+    """
+    fl = flows(inst, phi, solver=solver, axis=axis)
     D_links = jnp.where(inst.adj, costs.cost(inst.link_kind, fl.F, inst.link_param), 0.0)
     C_nodes = costs.cost(inst.comp_kind, fl.G, inst.comp_param)
     return jnp.sum(D_links) + jnp.sum(C_nodes)

@@ -3,6 +3,14 @@
 On CPU (this container) the kernels execute with interpret=True; on a real
 TPU the same call sites compile to Mosaic.  ``INTERPRET`` flips automatically
 from the backend.
+
+Shard-map contract (relied on by ``core/engine.py``, DESIGN.md §14): every
+wrapper here is *collective-free and per-member* — leading batch dims are
+flattened into the kernel grid and no wrapper ever reduces across them —
+so the GP step engine may call them unchanged inside ``shard_map`` (each
+app shard runs the kernels on its local slab) and under ``jax.vmap`` of a
+shard (mesh-composed scenario families).  Keep new wrappers collective-free
+too; network-wide reductions belong to the engine's ``axis`` plumbing.
 """
 
 from __future__ import annotations

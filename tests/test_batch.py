@@ -150,6 +150,56 @@ def test_scenario_registry_expands():
         scenarios.expand("no-such-sweep")
 
 
+def test_run_sweep_chained_warm_start():
+    """Warm-start chaining solves the identical problems: every member of a
+    rate ladder descends from its (possibly inherited) start and lands at
+    (or below) the cold-start optimum within tolerance."""
+    skw = {"scales": (1.0, 1.5)}
+    kw = dict(alpha=0.1, max_iters=120)
+    cold = scenarios.run_sweep_serial("fig6-congestion", sweep_kwargs=skw, **kw)
+    warm = scenarios.run_sweep_chained("fig6-congestion", sweep_kwargs=skw, **kw)
+    assert len(warm.results) == 2
+    # member 0 has no predecessor: identical cold solve
+    assert warm.results[0].final_cost == pytest.approx(
+        cold.results[0].final_cost, rel=1e-6)
+    for c, w in zip(cold.results, warm.results):
+        assert w.final_cost <= c.final_cost * 1.01
+        ch = np.asarray(w.cost_history)
+        assert ch[-1] <= ch[0] + 1e-6          # still a descent
+
+
+def test_run_sweep_chained_shape_change_falls_back_cold():
+    """A topology change mid-chain cannot inherit phi — it must cold-start,
+    not crash or mis-shape."""
+    fam = [
+        network.table_ii_instance("abilene", seed=0, rate_scale=1.5),
+        network.table_ii_instance("balanced-tree", seed=0, rate_scale=1.5),
+    ]
+    scens = [scenarios.Scenario(label=f"m{i}", instance=inst)
+             for i, inst in enumerate(fam)]
+    warm = scenarios.run_sweep_chained(scens, alpha=0.1, max_iters=30)
+    ref = gp.solve(fam[1], alpha=0.1, max_iters=30)
+    assert warm.results[1].final_cost == pytest.approx(ref.final_cost, rel=1e-6)
+
+
+def test_run_sweep_chained_same_shape_different_dst_falls_back_cold():
+    """Two instances can share (A, K1, V, V) — and even the graph — while
+    disagreeing on destinations/chain structure (seed ensembles re-place
+    the apps); inheriting phi across them aims mass at the wrong exits.
+    The chain must detect the mismatch and cold-start, not inherit on
+    shape equality alone."""
+    fam = [network.table_ii_instance("abilene", seed=s, rate_scale=1.5)
+           for s in (0, 1)]
+    assert fam[0].adj.shape == fam[1].adj.shape
+    assert not np.array_equal(np.asarray(fam[0].dst), np.asarray(fam[1].dst))
+    scens = [scenarios.Scenario(label=f"ab{s}", instance=inst)
+             for s, inst in enumerate(fam)]
+    warm = scenarios.run_sweep_chained(scens, alpha=0.1, max_iters=25)
+    ref = gp.solve(fam[1], alpha=0.1, max_iters=25)
+    assert warm.results[1].final_cost == pytest.approx(ref.final_cost, rel=1e-6)
+    assert np.isfinite(np.asarray(warm.results[1].cost_history)).all()
+
+
 def test_run_sweep_groups_by_kind_and_size():
     """Mixed cost families and far-apart sizes split into separate batches
     but results stay aligned with the scenario list."""

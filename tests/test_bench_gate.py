@@ -1,0 +1,87 @@
+"""benchmarks.common.bench_check — the CI perf regression gate.
+
+Pure row-diff logic (no jax), so these run in milliseconds in the quick
+tier while CI's bench-smoke job exercises the same code end-to-end against
+the committed BENCH_gp.json.
+"""
+
+import json
+
+from benchmarks import common
+
+
+def _row(bench="kernel_bench", scenario="batched_lu:x", V=20,
+         solver="batched_lu", **extra):
+    row = {"bench": bench, "scenario": scenario, "V": V, "solver": solver}
+    row.update(extra)
+    return row
+
+
+def test_gate_passes_within_budget():
+    base = [_row(seconds=1.0e-3)]
+    fresh = [_row(seconds=1.4e-3)]            # 1.4x < 1.5x
+    assert common.bench_check(base, fresh) == []
+
+
+def test_gate_fails_above_budget():
+    base = [_row(seconds=1.0e-3)]
+    fresh = [_row(seconds=1.6e-3)]            # 1.6x > 1.5x
+    failures = common.bench_check(base, fresh)
+    assert len(failures) == 1
+    assert "batched_lu:x" in failures[0]
+
+
+def test_gate_prefers_s_per_iter_over_seconds():
+    # wall seconds regressed 10x but per-iteration cost is flat (the run
+    # simply committed more iterations) — the gate must not fire
+    base = [_row(bench="fig6", seconds=1.0, iters=100, s_per_iter=1e-2)]
+    fresh = [_row(bench="fig6", seconds=10.0, iters=1000, s_per_iter=1e-2)]
+    assert common.bench_check(base, fresh) == []
+
+
+def test_gate_ignores_noise_floor_and_unmatched_rows():
+    base = [_row(scenario="tiny", seconds=5e-5),
+            _row(scenario="gone", seconds=1.0)]
+    fresh = [_row(scenario="tiny", seconds=1.9e-4),   # 3.8x but sub-floor
+             _row(scenario="new-row", seconds=9.9)]   # no baseline -> skip
+    assert common.bench_check(base, fresh) == []
+
+
+def test_gate_skips_schema_drift_pairs():
+    # baseline recorded without iters, fresh gained s_per_iter: the shared
+    # field is `seconds`, so the 10x wall regression must still fire...
+    base = [_row(seconds=1.2)]
+    fresh = [_row(seconds=12.0, iters=120, s_per_iter=0.1)]
+    assert len(common.bench_check(base, fresh)) == 1
+    # ...and two rows sharing NO metric field are skipped, not compared
+    assert common.bench_check([_row(other=1)], [_row(s_per_iter=9.0)]) == []
+
+
+def test_load_rows_tolerates_non_dict_json(tmp_path):
+    p = tmp_path / "weird.json"
+    p.write_text("[]")                 # valid JSON, wrong top-level type
+    assert common.load_rows(str(p)) == []
+    p.write_text("not json at all")
+    assert common.load_rows(str(p)) == []
+
+
+def test_gate_keyed_by_full_tuple():
+    # same scenario, different solver => different measurement, no pairing
+    base = [_row(solver="dense", seconds=1e-3)]
+    fresh = [_row(solver="batched_lu", seconds=9e-3)]
+    assert common.bench_check(base, fresh) == []
+
+
+def test_check_main_round_trip(tmp_path):
+    baseline = tmp_path / "baseline.json"
+    fresh = tmp_path / "fresh.json"
+    baseline.write_text(json.dumps({"rows": [_row(seconds=1e-3)]}))
+    fresh.write_text(json.dumps({"rows": [_row(seconds=1e-3)]}))
+    assert common._check_main(["--check", str(baseline),
+                               "--fresh", str(fresh)]) == 0
+    fresh.write_text(json.dumps({"rows": [_row(seconds=9e-3)]}))
+    assert common._check_main(["--check", str(baseline),
+                               "--fresh", str(fresh)]) == 1
+    # empty/missing baseline: nothing to compare, gate stays green
+    assert common._check_main(["--check", str(tmp_path / "missing.json"),
+                               "--fresh", str(fresh)]) == 0

@@ -1,41 +1,138 @@
-"""shard_map GP: sharded solve must match the single-device solve."""
+"""Unified step engine under shard_map: the sharded solve must reproduce
+the single-device solve near-exactly (one shared step core, DESIGN.md §14).
 
+The multi-shard cases skip on a 1-device host; CI runs this module a second
+time under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the
+≥2-shard parity acceptance actually executes (ci.yml "Distributed quick
+tier").
+"""
+
+import inspect
+
+import jax
 import numpy as np
 import pytest
 
-from repro.core import compat, distributed, gp, network
+from repro.core import compat, distributed, gp, network, scenarios
+
+# Fixed-length budget: patience/tol stops are bit-sensitive to fp drift in
+# the stall counter, so parity tests pin the iteration count and compare
+# whole trajectories instead.
+KW = dict(alpha=0.1, max_iters=40, patience=10**6, tol=0.0)
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+)
 
 
-def _mesh1():
-    return compat.make_mesh((1,), ("stage",))
+def _mesh(n):
+    return compat.make_mesh((n,), ("stage",))
 
 
-def test_sharded_matches_unsharded_on_single_device():
-    inst = network.table_ii_instance("abilene", seed=0)
+def _rel_dev(a, b):
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(a), 1e-9)))
+
+
+def test_sharded_matches_solve_single_shard():
+    """1 shard: identical engine, identity collectives — exact trajectories."""
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=2.0)
     phi0 = gp.init_phi(inst)
-    mesh = _mesh1()
-    res_s = distributed.solve_sharded(inst, mesh, alpha=0.05, max_iters=60, phi0=phi0)
-    # reference: plain gp_step WITHOUT the stepsize ladder, same alpha
-    phi = phi0
-    for _ in range(60):
-        # emulate fixed-alpha by restricting the ladder to one rung
-        state = gp.gp_step(inst, phi, 0.05)
-        phi = state.phi
-    # both must be descents from the same start; costs should be close
+    ref = gp.solve(inst, phi0, **KW)
+    res = distributed.solve_sharded(inst, _mesh(1), phi0=phi0, **KW)
+    assert int(res.iterations) == int(ref.iterations) == 40
+    assert _rel_dev(ref.cost_history, res.cost_history) <= 1e-6
+    np.testing.assert_allclose(np.asarray(res.phi.e), np.asarray(ref.phi.e),
+                               atol=1e-6)
+
+
+@multi_device
+def test_sharded_matches_solve_two_shards():
+    """The acceptance criterion: >=2 app shards, cost histories <= 1e-4
+    (the only cross-shard fp difference is the psum partial-sum order)."""
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=2.0)
+    phi0 = gp.init_phi(inst)
+    ref = gp.solve(inst, phi0, **KW)
+    res = distributed.solve_sharded(inst, _mesh(2), phi0=phi0, **KW)
+    assert int(res.iterations) == int(ref.iterations) == 40
+    assert _rel_dev(ref.cost_history, res.cost_history) <= 1e-4
+    # phi itself may drift along equal-cost (flat) directions as the psum
+    # partial-sum order perturbs ladder near-ties; what must match is the
+    # cost the strategy induces.
     from repro.core.traffic import total_cost
 
-    c_ref = float(total_cost(inst, phi))
-    c_shard = res_s.cost_history[-1]
-    assert np.isfinite(c_shard)
-    assert c_shard <= res_s.cost_history[0] + 1e-5          # sharded descends
-    assert c_shard <= c_ref * 1.10                          # and is competitive
+    c_ref = float(total_cost(inst, ref.phi))
+    c_res = float(total_cost(inst, res.phi))
+    assert c_res == pytest.approx(c_ref, rel=1e-4)
+
+
+@multi_device
+def test_sharded_solver_dispatch_two_shards():
+    """solver=/blocked= dispatch reaches the mesh path: the batched-LU +
+    bitset program matches the dense + scan reference program."""
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=2.0)
+    phi0 = gp.init_phi(inst)
+    kw = dict(alpha=0.1, max_iters=15, patience=10**6, tol=0.0)
+    mesh = _mesh(2)
+    fused = distributed.solve_sharded(inst, mesh, phi0=phi0,
+                                      solver="batched_lu", blocked="bitset",
+                                      **kw)
+    dense = distributed.solve_sharded(inst, mesh, phi0=phi0,
+                                      solver="dense", blocked="scan", **kw)
+    assert _rel_dev(dense.cost_history, fused.cost_history) <= 1e-4
 
 
 def test_sharded_pads_applications():
+    """App padding to the shard count keeps dead apps degenerate and the
+    solution identical to the unpadded single-device solve."""
     inst = network.table_ii_instance("abilene", seed=0)   # A=3
     padded, A = distributed._pad_apps(inst, 2)
     assert A == 3 and padded.A == 4
     assert float(padded.r[3].sum()) == 0.0
-    mesh = _mesh1()
-    res = distributed.solve_sharded(inst, mesh, alpha=0.05, max_iters=20)
+    assert not bool(np.asarray(padded.stage_mask[3]).any())
+    # the non-multiple A still solves (1 shard here; 2-shard parity above
+    # exercises the padded lanes on a real mesh) and phi is un-padded
+    res = distributed.solve_sharded(inst, _mesh(1), alpha=0.05, max_iters=20)
     assert res.phi.e.shape[0] == 3
+
+
+@multi_device
+def test_sharded_pads_applications_two_shards():
+    """A=3 padded to 4 across 2 shards: the dead app contributes nothing."""
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=2.0)
+    ref = gp.solve(inst, gp.init_phi(inst), **KW)
+    res = distributed.solve_sharded(inst, _mesh(2),
+                                    phi0=gp.init_phi(inst), **KW)
+    assert res.phi.e.shape[0] == inst.A
+    assert _rel_dev(ref.cost_history, res.cost_history) <= 1e-4
+
+
+def test_run_sweep_mesh_matches_plain():
+    """Mesh-composed sweep (vmap-of-shard_map) == plain batched sweep."""
+    n = min(len(jax.devices()), 2)
+    skw = {"scenario": "abilene", "n_seeds": 3, "rate_scale": 2.0}
+    plain = scenarios.run_sweep("seed-ensemble", sweep_kwargs=skw, **KW)
+    meshed = scenarios.run_sweep("seed-ensemble", sweep_kwargs=skw,
+                                 mesh=_mesh(n), **KW)
+    assert len(meshed.results) == 3
+    for a, b in zip(plain.results, meshed.results):
+        assert b.final_cost == pytest.approx(a.final_cost, rel=1e-4)
+        assert b.phi.e.shape == a.phi.e.shape
+
+
+def test_distributed_has_no_inline_step_math():
+    """The module is a mesh adapter only: every piece of GP-step math
+    (marginals, blocked sets, projection, renormalize, collectives) lives
+    in the shared engine.  Checked over the actual code identifiers (names
+    and attribute accesses), not docstrings."""
+    import ast
+
+    tree = ast.parse(inspect.getsource(distributed))
+    idents = {n.id for n in ast.walk(tree) if isinstance(n, ast.Name)}
+    idents |= {n.attr for n in ast.walk(tree) if isinstance(n, ast.Attribute)}
+    for token in ("pdt_recursion", "renormalize", "blocked_sets", "psum",
+                  "pmax", "marginals", "stage_traffic", "gp_step",
+                  "delta_e", "delta_c"):
+        assert token not in idents, f"inline step math leaked back: {token}"
