@@ -58,6 +58,13 @@ def bench_record(bench: str, *, scenario: str, V: int, solver: str,
 MAX_SLOWDOWN = 1.5
 NOISE_FLOOR_S = 2e-4
 
+# Iteration-count gate: total committed GP iterations are deterministic
+# (no timing noise), so the budget is much tighter than the wall-clock one.
+# A pair participates only when BOTH rows carry ``iters`` — rows that
+# gained or lost the field between runs are schema drift, not a regression.
+MAX_ITERS_REGRESSION = 1.2
+_ITERS_NOISE_FLOOR = 8    # don't flag e.g. 5 -> 7 on trivially-small solves
+
 
 def _row_key(row: dict) -> tuple:
     return (row.get("bench"), row.get("scenario"), row.get("V"),
@@ -89,20 +96,30 @@ def load_rows(path: str) -> list[dict]:
 
 def bench_check(baseline_rows: list[dict], fresh_rows: list[dict] | None = None,
                 *, max_slowdown: float = MAX_SLOWDOWN,
-                noise_floor_s: float = NOISE_FLOOR_S) -> list[str]:
+                noise_floor_s: float = NOISE_FLOOR_S,
+                max_iters_regression: float = MAX_ITERS_REGRESSION
+                ) -> list[str]:
     """Diff freshly generated bench rows against a committed baseline.
 
     Rows pair up by the ``bench_record`` key (bench, scenario, V, solver);
     fresh rows with no committed counterpart (new measurements) and
-    baseline rows not regenerated this run are both ignored.  A pair fails
-    when the fresh metric (``s_per_iter`` when both rows carry it, else
-    ``seconds`` — always the same field on both sides, see
-    :func:`_pair_metrics`)
-    exceeds ``max_slowdown`` x max(baseline metric, noise floor) AND the
-    fresh metric itself sits above the noise floor.  Returns human-readable
-    failure lines (empty = gate passes) — the CI ``bench-smoke`` job runs
-    this via ``python -m benchmarks.common --check <committed-baseline>``
-    after ``kernel_bench --smoke`` regenerates the kernel rows.
+    baseline rows not regenerated this run are both ignored.  Two gates run
+    per pair:
+
+      * **time** — fails when the fresh metric (``s_per_iter`` when both
+        rows carry it, else ``seconds`` — always the same field on both
+        sides, see :func:`_pair_metrics`) exceeds ``max_slowdown`` x
+        max(baseline metric, noise floor) AND the fresh metric itself sits
+        above the noise floor;
+      * **iters** — when both rows carry ``iters``, fails when the fresh
+        total iteration count exceeds ``max_iters_regression`` x the
+        committed one (iteration counts are deterministic, so the budget is
+        tight; counts at or below ``_ITERS_NOISE_FLOOR`` are exempt).
+
+    Returns human-readable failure lines (empty = gate passes) — the CI
+    ``bench-smoke`` job runs this via ``python -m benchmarks.common
+    --check <committed-baseline>`` after ``kernel_bench --smoke``
+    regenerates the kernel rows.
     """
     if fresh_rows is None:
         fresh_rows = load_rows(BENCH_PATH)
@@ -112,18 +129,54 @@ def bench_check(baseline_rows: list[dict], fresh_rows: list[dict] | None = None,
         ref = base.get(_row_key(row))
         if ref is None:
             continue
+        key = "/".join(str(k) for k in _row_key(row))
         m_new, m_old = _pair_metrics(row, ref)
-        if m_new is None or m_old is None:
-            continue
-        if m_new <= noise_floor_s:
-            continue
-        limit = max_slowdown * max(float(m_old), noise_floor_s)
-        if float(m_new) > limit:
-            failures.append(
-                f"{'/'.join(str(k) for k in _row_key(row))}: "
-                f"{float(m_new):.6f}s vs committed {float(m_old):.6f}s "
-                f"(> {max_slowdown:.2f}x)")
+        if m_new is not None and m_old is not None and m_new > noise_floor_s:
+            limit = max_slowdown * max(float(m_old), noise_floor_s)
+            if float(m_new) > limit:
+                failures.append(
+                    f"{key}: {float(m_new):.6f}s vs committed "
+                    f"{float(m_old):.6f}s (> {max_slowdown:.2f}x)")
+        if "iters" in row and "iters" in ref:
+            it_new, it_old = int(row["iters"]), int(ref["iters"])
+            if (it_new > _ITERS_NOISE_FLOOR
+                    and it_new > max_iters_regression * max(it_old, 1)):
+                failures.append(
+                    f"{key}: {it_new} iters vs committed {it_old} "
+                    f"(> {max_iters_regression:.2f}x)")
     return failures
+
+
+def delta_table(baseline_rows: list[dict], fresh_rows: list[dict]
+                ) -> list[str]:
+    """One line per compared pair showing BOTH the time and iters deltas.
+
+    Columns: row key, s_per_iter (or seconds) fresh/committed with the
+    ratio, and — when both rows carry ``iters`` — the iteration counts with
+    their ratio.  Purely informational (the pass/fail decision is
+    :func:`bench_check`'s); ``--check`` prints it so a CI log shows where
+    the time went even when the gate is green.
+    """
+    base = {_row_key(r): r for r in baseline_rows}
+    lines = []
+    for row in fresh_rows:
+        ref = base.get(_row_key(row))
+        if ref is None:
+            continue
+        key = "/".join(str(k) for k in _row_key(row))
+        m_new, m_old = _pair_metrics(row, ref)
+        if m_new is not None and m_old is not None:
+            ratio = float(m_new) / max(float(m_old), 1e-12)
+            time_col = f"{float(m_new):.6f}s/{float(m_old):.6f}s ({ratio:.2f}x)"
+        else:
+            time_col = "-"
+        if "iters" in row and "iters" in ref:
+            it_new, it_old = int(row["iters"]), int(ref["iters"])
+            iters_col = f"{it_new}/{it_old} ({it_new / max(it_old, 1):.2f}x)"
+        else:
+            iters_col = "-"
+        lines.append(f"{key}: time {time_col} | iters {iters_col}")
+    return lines
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -182,6 +235,8 @@ def _check_main(argv: list[str]) -> int:
     ap.add_argument("--fresh", default=BENCH_PATH,
                     help="freshly generated rows (default: BENCH_gp.json)")
     ap.add_argument("--max-slowdown", type=float, default=MAX_SLOWDOWN)
+    ap.add_argument("--max-iters-regression", type=float,
+                    default=MAX_ITERS_REGRESSION)
     args = ap.parse_args(argv)
     baseline = load_rows(args.check)
     fresh = load_rows(args.fresh)
@@ -189,17 +244,22 @@ def _check_main(argv: list[str]) -> int:
         print(f"bench_check: nothing to compare "
               f"({len(baseline)} baseline rows, {len(fresh)} fresh rows)")
         return 0
-    failures = bench_check(baseline, fresh, max_slowdown=args.max_slowdown)
+    failures = bench_check(baseline, fresh, max_slowdown=args.max_slowdown,
+                           max_iters_regression=args.max_iters_regression)
+    table = delta_table(baseline, fresh)
     compared = len({_row_key(r) for r in fresh}
                    & {_row_key(r) for r in baseline})
+    print(f"bench_check: {compared} compared row(s) "
+          f"(fresh/committed, ratio):")
+    for line in table:
+        print(f"  {line}")
     if failures:
-        print(f"bench_check: {len(failures)} regression(s) over "
-              f"{compared} compared row(s):")
+        print(f"bench_check: {len(failures)} regression(s):")
         for line in failures:
             print(f"  REGRESSION {line}")
         return 1
-    print(f"bench_check: OK ({compared} rows within "
-          f"{args.max_slowdown:.2f}x of committed)")
+    print(f"bench_check: OK (time within {args.max_slowdown:.2f}x, iters "
+          f"within {args.max_iters_regression:.2f}x of committed)")
     return 0
 
 

@@ -82,6 +82,19 @@ def main() -> dict:
          f"iter_cut:{warm_start['iter_cut']:.0%}|"
          f"serial_s:{serials['GP'].seconds:.2f}")
 
+    # accelerated batched GP over the same rate ladder (§15 layer): the
+    # committed row pairs with GP-batched for the iters-reduction claim
+    scenarios.run_sweep("fig6-congestion", accel=True, **kw)
+    accel = scenarios.run_sweep("fig6-congestion", accel=True, **kw)
+    it_plain = sum(int(r.iterations) for r in sweeps["GP"].results)
+    it_accel = sum(int(r.iterations) for r in accel.results)
+    bench_record("fig6", scenario="abilene-rates", V=11,
+                 solver="GP-accel-batched", seconds=accel.seconds,
+                 iters=it_accel, n=len(SCALES), plain_iters=it_plain)
+    emit("fig6_gp_accel", accel.seconds * 1e6,
+         f"iters:{it_accel}|plain:{it_plain}|"
+         f"iter_cut:{1 - it_accel / max(it_plain, 1):.0%}")
+
     speedups = {}
     for solver, _ in SOLVERS:
         bat, ser = sweeps[solver], serials[solver]
@@ -108,7 +121,10 @@ def main() -> dict:
     save_json("fig6.json", {"curve": curve, "advantage_ratios": ratios,
                             "advantage_grows_with_congestion": grows,
                             "solver_speedups": speedups,
-                            "warm_start": warm_start})
+                            "warm_start": warm_start,
+                            "accel": {"iters": it_accel,
+                                      "plain_iters": it_plain,
+                                      "seconds": accel.seconds}})
     emit("fig6_summary", 0.0,
          "ratios=" + "|".join(f"{r:.2f}" for r in ratios) + f" grows={grows}")
     return curve

@@ -109,28 +109,40 @@ def _pad_tree_apps(tree, A_pad: int, *, batched: bool = False):
 @functools.lru_cache(maxsize=None)
 def _chunk_program(mesh: Mesh, axis: str, link_kind: int, comp_kind: int,
                    length: int, scaled: bool, solver: str, blocked: str,
-                   has_masks: bool):
+                   has_masks: bool, accel=None):
     """Build the jitted shard_map'd chunk for one (mesh, config) combination.
 
     The stacked Instance is decomposed into per-application (app-sharded)
     and network-level (replicated) arrays so the shard_map specs stay
     simple; each shard reassembles its local Instance, vmaps
     :func:`engine.scan_chunk` over the member axis, and the ``axis``-bound
-    psum/pmax collectives inside the engine provide the network-wide
-    measurement.  Cached so each chunk length compiles once per mesh.
+    collectives inside the engine provide the network-wide measurement.
+    Cached so each chunk length compiles once per mesh; ``accel`` (a
+    resolved hashable :class:`engine.AccelConfig` or None) is part of the
+    cache key, like ``solver``/``blocked``.
+
+    The §15 Anderson ring buffers travel as *opaque per-shard slabs*: the
+    flat feature axis of ``ax``/``af`` is sharded (``P(None, None, axis)``)
+    into slices exactly the size of each shard's locally flattened phi, and
+    a slice is only ever produced and consumed by the same shard — the
+    global buffer layout is never interpreted.  The adaptive ``alpha`` and
+    history count ``ak`` are replicated (the winning rung and the push
+    cadence are shard-identical by construction).
     """
     app = P(None, axis)     # (B, A, ...): member axis plain, apps sharded
+    buf = P(None, None, axis)   # (B, m, N): Anderson slab, N axis sharded
     rep = P()
 
     def chunk(L, w, r, dst, n_tasks, stage_mask,          # app-sharded
               adj, link_param, comp_param, wnode,         # replicated
               phi_e, phi_c,                               # app-sharded carry
               best_cost, stall, done, iters, cost, residual,
+              aalpha, ax, af, ak,                         # accel carry (§15)
               alpha, tol, patience, max_iters, *masks):
 
         def one(L, w, r, dst, n_tasks, stage_mask, adj, link_param,
                 comp_param, wnode, phi_e, phi_c, best_cost, stall, done,
-                iters, cost, residual, ae, ac):
+                iters, cost, residual, aalpha, ax, af, ak, ae, ac):
             inst_l = Instance(
                 adj=adj, link_param=link_param, link_kind=link_kind,
                 comp_param=comp_param, comp_kind=comp_kind,
@@ -140,26 +152,30 @@ def _chunk_program(mesh: Mesh, axis: str, link_kind: int, comp_kind: int,
             carry = engine.ScanCarry(
                 phi=Phi(e=phi_e, c=phi_c), best_cost=best_cost, stall=stall,
                 done=done, iters=iters, cost=cost, residual=residual,
+                alpha=aalpha, ax=ax, af=af, ak=ak,
             )
             carry, (cs, rs) = engine.scan_chunk(
                 inst_l, carry, alpha, tol, patience, max_iters, ae, ac,
                 length=length, scaled=scaled, solver=solver, blocked=blocked,
-                axis=axis,
+                axis=axis, accel=accel,
             )
             return (carry.phi.e, carry.phi.c, carry.best_cost, carry.stall,
                     carry.done, carry.iters, carry.cost, carry.residual,
+                    carry.alpha, carry.ax, carry.af, carry.ak,
                     cs, rs)
 
         ae, ac = masks if has_masks else (None, None)
-        in_axes = (0,) * 18 + ((0, 0) if has_masks else (None, None))
+        in_axes = (0,) * 22 + ((0, 0) if has_masks else (None, None))
         return jax.vmap(one, in_axes=in_axes)(
             L, w, r, dst, n_tasks, stage_mask, adj, link_param, comp_param,
             wnode, phi_e, phi_c, best_cost, stall, done, iters, cost,
-            residual, ae, ac)
+            residual, aalpha, ax, af, ak, ae, ac)
 
     in_specs = ((app,) * 6 + (rep,) * 4 + (app, app) + (rep,) * 6
+                + (rep, buf, buf, rep)
                 + (rep,) * 4 + ((app, app) if has_masks else ()))
-    out_specs = (app, app) + (rep,) * 6 + (rep, rep)
+    out_specs = ((app, app) + (rep,) * 6 + (rep, buf, buf, rep)
+                 + (rep, rep))
     smapped = compat.shard_map(chunk, mesh=mesh, in_specs=in_specs,
                                out_specs=out_specs, check=False)
     return jax.jit(smapped)
@@ -180,6 +196,7 @@ def solve_sharded_batched(
     scaled: bool = False,
     solver: str = "auto",
     blocked: str = "bitset",
+    accel=None,
 ) -> gp.GPScan:
     """Solve a padded scenario family with applications sharded over `axis`.
 
@@ -190,8 +207,11 @@ def solve_sharded_batched(
     host reads back only the batched ``done`` latch once per ``_CHUNK``
     iterations.  No convergence compaction on this path (members stay in
     their mesh lanes); histories follow the dense :class:`gp.GPScan`
-    contract.  ``solver=``/``blocked=`` dispatch exactly as in ``gp.solve``.
+    contract.  ``solver=``/``blocked=``/``accel=`` dispatch exactly as in
+    ``gp.solve`` (accelerated sharded trajectories match the accelerated
+    single-device ones — tests/test_accel.py).
     """
+    accel = engine.resolve_accel(accel)
     n_shards = mesh.shape[axis]
     B = int(binst.adj.shape[0])
     binst_p, A_orig = _pad_apps(binst, n_shards, batched=True)
@@ -206,7 +226,8 @@ def solve_sharded_batched(
     if has_masks and (allowed_e is None or allowed_c is None):
         raise ValueError("pass both allowed_e and allowed_c, or neither")
 
-    carry = jax.vmap(engine.init_carry)(binst_p, phi0)
+    carry = jax.vmap(
+        lambda i, p: engine.init_carry(i, p, accel=accel))(binst_p, phi0)
     alpha_, tol_ = jnp.float32(alpha), jnp.float32(tol)
     patience_, max_iters_ = jnp.int32(patience), jnp.int32(max_iters)
 
@@ -219,18 +240,22 @@ def solve_sharded_batched(
     while steps < max_iters:
         length = min(_CHUNK, max_iters - steps)
         fn = _chunk_program(mesh, axis, binst_p.link_kind, binst_p.comp_kind,
-                            length, scaled, solver, blocked, has_masks)
+                            length, scaled, solver, blocked, has_masks,
+                            accel)
         mask_args = (allowed_e, allowed_c) if has_masks else ()
-        (phi_e, phi_c, best, stall, done, iters, cost, residual, cs, rs
+        (phi_e, phi_c, best, stall, done, iters, cost, residual,
+         aalpha, ax, af, ak, cs, rs
          ) = fn(binst_p.L, binst_p.w, binst_p.r, binst_p.dst,
                 binst_p.n_tasks, binst_p.stage_mask, binst_p.adj,
                 binst_p.link_param, binst_p.comp_param, binst_p.wnode,
                 c.phi.e, c.phi.c, c.best_cost, c.stall, c.done, c.iters,
-                c.cost, c.residual, alpha_, tol_, patience_, max_iters_,
+                c.cost, c.residual, c.alpha, c.ax, c.af, c.ak,
+                alpha_, tol_, patience_, max_iters_,
                 *mask_args)
         c = engine.ScanCarry(phi=Phi(e=phi_e, c=phi_c), best_cost=best,
                              stall=stall, done=done, iters=iters, cost=cost,
-                             residual=residual)
+                             residual=residual, alpha=aalpha, ax=ax, af=af,
+                             ak=ak)
         cost_hist[:, steps + 1: steps + 1 + length] = np.asarray(cs)
         res_hist[:, steps: steps + length] = np.asarray(rs)
         steps += length
@@ -267,6 +292,7 @@ def solve_sharded(
     scaled: bool = False,
     solver: str = "auto",
     blocked: str = "bitset",
+    accel=None,
 ) -> gp.GPResult:
     """Run GP with applications sharded across a device mesh axis.
 
@@ -283,7 +309,7 @@ def solve_sharded(
         phi0=None if phi0 is None else lift(phi0),
         allowed_e=None if allowed_e is None else lift(allowed_e),
         allowed_c=None if allowed_c is None else lift(allowed_c),
-        scaled=scaled, solver=solver, blocked=blocked)
+        scaled=scaled, solver=solver, blocked=blocked, accel=accel)
     member = jax.tree_util.tree_map(lambda x: x[0], scan)
     return gp.GPResult(
         phi=member.phi, cost_history=member.cost_history,

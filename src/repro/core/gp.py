@@ -127,6 +127,7 @@ def gp_step(
     scaled: bool = False,
     solver: str = "auto",
     blocked: str = "bitset",
+    accel=None,
 ) -> GPState:
     """One fused GP iteration on a single device.
 
@@ -136,9 +137,12 @@ def gp_step(
     blocked-set method (``"bitset"`` | ``"scan"``, DESIGN.md §13); the mesh
     path (``distributed.solve_sharded``) runs the same engine under
     ``shard_map`` with ``axis`` bound to the app-shard mesh axis.
+    ``accel`` toggles the §15 step-level acceleration (adaptive ladder /
+    exact residual) — see :func:`engine.resolve_accel`.
     """
     return engine.gp_step(inst, phi, alpha, allowed_e, allowed_c, scaled,
-                          solver, blocked=blocked, axis=None)
+                          solver, blocked=blocked, axis=None,
+                          accel=engine.resolve_accel(accel))
 
 
 # ---------------------------------------------------------------------------
@@ -240,33 +244,37 @@ def init_phi(inst: Instance) -> Phi:
 #                   as the semantic reference (tests/test_batch.py asserts
 #                   scan == loop on every Table II scenario).
 
-@functools.partial(jax.jit, static_argnames=("scaled", "solver", "blocked"))
+@functools.partial(jax.jit,
+                   static_argnames=("scaled", "solver", "blocked", "accel"))
 def _jit_step(inst, phi, alpha, allowed_e, allowed_c, scaled=False,
-              solver="auto", blocked="bitset"):
+              solver="auto", blocked="bitset", accel=None):
     return engine.gp_step(inst, phi, alpha, allowed_e, allowed_c, scaled,
-                          solver, blocked=blocked, axis=None)
+                          solver, blocked=blocked, axis=None, accel=accel)
 
 
 _init_carry = engine.init_carry
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("length", "scaled", "solver", "blocked"))
+                   static_argnames=("length", "scaled", "solver", "blocked",
+                                    "accel"))
 def _scan_chunk(
     inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
     *, length: int, scaled: bool = False, solver: str = "auto",
-    blocked: str = "bitset",
+    blocked: str = "bitset", accel=None,
 ):
     """Jitted single-device wrapper over :func:`engine.scan_chunk`.
 
     Early-stop is a *mask*, not a break (see the engine docstring): the
     ``done`` latch freezes the carry and subsequent steps re-emit the
-    converged (cost, residual), keeping history shapes static.
+    converged (cost, residual), keeping history shapes static.  ``accel``
+    is a resolved :class:`engine.AccelConfig` (or None) riding as a static
+    argument — each distinct config compiles its own program.
     """
     return engine.scan_chunk(
         inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
         length=length, scaled=scaled, solver=solver, blocked=blocked,
-        axis=None)
+        axis=None, accel=accel)
 
 
 def solve_scan(
@@ -282,6 +290,7 @@ def solve_scan(
     scaled: bool = False,
     solver: str = "auto",
     blocked: str = "bitset",
+    accel=None,
 ) -> GPScan:
     """Algorithm 1 as a single device-resident ``lax.scan``.
 
@@ -307,13 +316,20 @@ def solve_scan(
     (kernels/batched_solve.py); solver="dense" keeps the seed's per-stage
     ``jnp.linalg.solve`` for differential testing; solver="auto" (default)
     picks per backend/size (``traffic.resolve_solver``).
+
+    accel=True (or an :class:`engine.AccelConfig`) enables the §15
+    convergence-acceleration layer — Anderson mixing, per-member adaptive
+    stepsize, sufficiency-residual stopping; default None keeps the legacy
+    exact iteration.
     """
+    accel = engine.resolve_accel(accel)
     phi = phi0 if phi0 is not None else init_phi(inst)
-    carry0 = _init_carry(inst, phi)
+    carry0 = _init_carry(inst, phi, accel=accel)
     carry, (cs, rs) = _scan_chunk(
         inst, carry0, jnp.float32(alpha), jnp.float32(tol),
         jnp.int32(patience), jnp.int32(max_iters), allowed_e, allowed_c,
         length=max_iters, scaled=scaled, solver=solver, blocked=blocked,
+        accel=accel,
     )
     return GPScan(
         phi=carry.phi, cost=carry.cost, residual=carry.residual,
@@ -352,6 +368,7 @@ def solve(
     scaled: bool = False,
     solver: str = "auto",
     blocked: str = "bitset",
+    accel=None,
 ) -> GPResult:
     """Run Algorithm 1 until the sufficiency residual falls below tol.
 
@@ -361,10 +378,12 @@ def solve(
     per-iteration cost stays identical to the fully device-resident scan.
 
     scaled=True enables the quasi-Newton diagonal preconditioner (paper
-    Section IV remark on second-order methods)."""
+    Section IV remark on second-order methods).  accel=True (or an
+    :class:`engine.AccelConfig`) enables the §15 acceleration layer."""
     del track_every
+    accel = engine.resolve_accel(accel)
     phi = phi0 if phi0 is not None else init_phi(inst)
-    carry = _init_carry(inst, phi)
+    carry = _init_carry(inst, phi, accel=accel)
     cost0 = carry.cost
     alpha_, tol_ = jnp.float32(alpha), jnp.float32(tol)
     patience_, max_iters_ = jnp.int32(patience), jnp.int32(max_iters)
@@ -375,7 +394,7 @@ def solve(
             inst, carry, alpha_, tol_, patience_, max_iters_,
             allowed_e, allowed_c,
             length=min(_SOLVE_CHUNK, max_iters - steps), scaled=scaled,
-            solver=solver, blocked=blocked,
+            solver=solver, blocked=blocked, accel=accel,
         )
         cost_chunks.append(cs)
         res_chunks.append(rs)
@@ -391,16 +410,17 @@ def solve(
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("length", "scaled", "solver", "blocked"))
+                   static_argnames=("length", "scaled", "solver", "blocked",
+                                    "accel"))
 def _scan_chunk_batched(
     inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
     *, length: int, scaled: bool = False, solver: str = "auto",
-    blocked: str = "bitset",
+    blocked: str = "bitset", accel=None,
 ):
     def one(i, c, ae, ac):
         return _scan_chunk(i, c, alpha, tol, patience, max_iters, ae, ac,
                            length=length, scaled=scaled, solver=solver,
-                           blocked=blocked)
+                           blocked=blocked, accel=accel)
 
     return jax.vmap(one)(inst, carry, allowed_e, allowed_c)
 
@@ -423,6 +443,7 @@ def solve_batched(
     compact: bool = True,
     solver: str = "auto",
     blocked: str = "bitset",
+    accel=None,
 ) -> GPScan:
     """Solve a whole scenario family (a ``batch.pad_instances`` pytree with
     a leading batch axis) in one vmapped device program.
@@ -467,9 +488,10 @@ def solve_batched(
         ((4,), (4, 201))
     """
     B = int(binst.adj.shape[0])
+    accel = engine.resolve_accel(accel)
     if phi0 is None:
         phi0 = jax.vmap(init_phi)(binst)
-    carry = jax.vmap(_init_carry)(binst, phi0)
+    carry = jax.vmap(lambda i, p: _init_carry(i, p, accel=accel))(binst, phi0)
     alpha_, tol_ = jnp.float32(alpha), jnp.float32(tol)
     patience_, max_iters_ = jnp.int32(patience), jnp.int32(max_iters)
 
@@ -513,6 +535,7 @@ def solve_batched(
         carry, (cs, rs) = _scan_chunk_batched(
             inst_p, carry, alpha_, tol_, patience_, max_iters_, ae_p, ac_p,
             length=length, scaled=scaled, solver=solver, blocked=blocked,
+            accel=accel,
         )
         valid = ids >= 0
         vids = ids[valid]

@@ -246,7 +246,10 @@ def run_sweep(name_or_scenarios, *, sweep_kwargs: Optional[dict] = None,
     ``name_or_scenarios`` is a registry name (``"fig5"``,
     ``"fig6-congestion"``, ``"fig7-packetsize"``, ``"seed-ensemble"``,
     ``"mixed-topology"`` — expanded with ``sweep_kwargs``) or an explicit
-    ``list[Scenario]``; remaining kwargs go to ``gp.solve_batched``.
+    ``list[Scenario]``; remaining kwargs go to ``gp.solve_batched`` —
+    including ``accel=`` (the §15 convergence-acceleration layer), which
+    therefore applies uniformly to every member of the family on both the
+    single-device and ``mesh=`` paths.
     ``masks_fn`` restricts the direction set per member (the SPOC/LCOF
     baselines — ``baselines.BASELINE_MASKS``); it is evaluated under
     ``jax.vmap`` on each padded group (see :func:`solve_family`).
@@ -348,7 +351,9 @@ def run_sweep_chained(name_or_scenarios, *,
     disagreeing on which edges exist, and phi mass on a non-edge poisons
     the traffic fixed point) — falls back to a cold start.  ``masks_fn``
     restrictions still apply per member; the chained phi only replaces the
-    *initial* strategy.
+    *initial* strategy.  With ``accel=`` each member's solve builds a fresh
+    carry, so the Anderson history and adaptive stepsize never leak across
+    chain members (only the warm-started phi does).
     """
     import numpy as np
 

@@ -62,14 +62,54 @@ def _solve_stage(phi_e_k: jnp.ndarray, inject: jnp.ndarray) -> jnp.ndarray:
 
 
 # Below this node count the CPU fallback's batched factor+substitution is
-# dispatch-bound and loses to the per-stage dense solve.  The fused chain
-# substitution (ops.fused_chain_solve — per-stage padding/transpose/perm
-# costs hoisted out of the scan, statically-sliced block matvecs) moved the
-# measured crossover down from 64: on the 2-core CPU reference box, dense
-# wins ~1.4x at V=32, parity at V=48, batched wins ~1.2x at V=64 and ~1.8x
-# at V=100 (DESIGN.md §13).  On TPU the Pallas kernel path is always
-# preferred.
-AUTO_MIN_V = 48
+# dispatch-bound and loses to the per-stage dense solve.  On TPU the Pallas
+# kernel path is always preferred.  The historical hand-measured value;
+# used whenever BENCH_gp.json rows are unavailable.
+_AUTO_MIN_V_FALLBACK = 48
+
+
+def _derive_auto_min_v(rows: Optional[list] = None) -> int:
+    """Dense-vs-batched crossover V, derived from committed bench rows.
+
+    Reads the repo's BENCH_gp.json ``gp_scaling``/``batched_lu`` rows
+    (each carries the measured batched-over-dense ``speedup`` at one V)
+    and linearly interpolates the V where the speedup crosses 1.0.  The
+    committed measurements put the crossover well below the old hardcoded
+    48 (0.95x already at V=22), so deriving it here fixes the small-V
+    dispatch regression without baking in another magic constant.  Any
+    failure — file missing (installed package), rows absent, no crossing
+    bracketed — falls back to :data:`_AUTO_MIN_V_FALLBACK`.  ``rows``
+    injects a row list directly (tests); default None reads the file.
+    """
+    import json
+    import os
+
+    if rows is None:
+        path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "..", "..", "..", "BENCH_gp.json")
+        try:
+            with open(path) as fh:
+                rows = json.load(fh)["rows"]
+        except (OSError, ValueError, KeyError):
+            return _AUTO_MIN_V_FALLBACK
+    pts = sorted(
+        {int(r["V"]): float(r["speedup"])
+         for r in rows
+         if r.get("bench") == "gp_scaling"
+         and r.get("solver") == "batched_lu"
+         and "V" in r and "speedup" in r}.items())
+    if len(pts) < 2:
+        return _AUTO_MIN_V_FALLBACK
+    if pts[0][1] >= 1.0:
+        return pts[0][0]          # batched wins from the smallest measured V
+    for (v1, s1), (v2, s2) in zip(pts, pts[1:]):
+        if s1 < 1.0 <= s2:
+            frac = (1.0 - s1) / (s2 - s1)
+            return max(2, int(-(-(v1 + frac * (v2 - v1)) // 1)))
+    return _AUTO_MIN_V_FALLBACK   # never crosses in the measured range
+
+
+AUTO_MIN_V = _derive_auto_min_v()
 
 
 def resolve_solver(solver: str, V: int) -> str:

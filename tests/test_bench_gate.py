@@ -33,10 +33,43 @@ def test_gate_fails_above_budget():
 
 def test_gate_prefers_s_per_iter_over_seconds():
     # wall seconds regressed 10x but per-iteration cost is flat (the run
-    # simply committed more iterations) — the gate must not fire
+    # simply committed more iterations) — the TIME gate must not fire; the
+    # 10x iteration blow-up is exactly what the ITERS gate exists to catch
     base = [_row(bench="fig6", seconds=1.0, iters=100, s_per_iter=1e-2)]
     fresh = [_row(bench="fig6", seconds=10.0, iters=1000, s_per_iter=1e-2)]
+    failures = common.bench_check(base, fresh)
+    assert len(failures) == 1
+    assert "1000 iters" in failures[0]        # the iters gate, not the time one
+    # modest iteration drift (1.15x < 1.2x) passes both gates
+    fresh = [_row(bench="fig6", seconds=1.15, iters=115, s_per_iter=1e-2)]
     assert common.bench_check(base, fresh) == []
+
+
+def test_iters_gate_fires_and_respects_floor():
+    base = [_row(bench="fig6", seconds=1.0, iters=100, s_per_iter=1e-2)]
+    fresh = [_row(bench="fig6", seconds=1.3, iters=130, s_per_iter=1e-2)]
+    failures = common.bench_check(base, fresh)        # 1.3x > 1.2x
+    assert len(failures) == 1 and "130 iters" in failures[0]
+    # trivially small counts are exempt (5 -> 7 is 1.4x but sub-floor)
+    base = [_row(bench="fig6", seconds=1.0, iters=5, s_per_iter=0.2)]
+    fresh = [_row(bench="fig6", seconds=1.0, iters=7, s_per_iter=0.14)]
+    assert common.bench_check(base, fresh) == []
+    # rows that gained/lost the iters field are schema drift, not failures
+    base = [_row(bench="fig6", seconds=1.0)]
+    fresh = [_row(bench="fig6", seconds=1.0, iters=900, s_per_iter=1e-3)]
+    assert common.bench_check(base, fresh) == []
+
+
+def test_delta_table_reports_both_metrics():
+    base = [_row(bench="fig6", seconds=1.0, iters=100, s_per_iter=1e-2),
+            _row(scenario="timeonly", seconds=2.0)]
+    fresh = [_row(bench="fig6", seconds=0.5, iters=50, s_per_iter=1e-2),
+             _row(scenario="timeonly", seconds=1.0),
+             _row(scenario="unmatched", seconds=9.9)]
+    lines = common.delta_table(base, fresh)
+    assert len(lines) == 2                    # unmatched rows are skipped
+    assert "iters 50/100 (0.50x)" in lines[0]
+    assert lines[1].endswith("iters -")       # pair without iters
 
 
 def test_gate_ignores_noise_floor_and_unmatched_rows():
