@@ -48,6 +48,28 @@ def sufficiency_residual(inst: Instance, phi: Phi, active_eps: float = 1e-6) -> 
     return _residual(min_margin, m.delta_e, m.delta_c, phi, active_eps)
 
 
+def per_app_residual(inst: Instance, phi: Phi,
+                     active_eps: float = 1e-6) -> jnp.ndarray:
+    """(A,) sufficiency residual of condition (6), reduced per application.
+
+    Same excess as :func:`sufficiency_residual` — marginals are computed
+    under the *global* flows F/G, so an application's residual reflects the
+    congestion every other application imposes on it — but the max is taken
+    only over that application's own (k, i, j) directions.  An entry of ~0
+    certifies the application's strategy is stationary given everyone
+    else's; this is the skip gate the online solver uses to avoid
+    re-solving applications an event did not disturb
+    (``serve/online.py``).  Applications with no active directions (dead /
+    padded rows) report exactly 0.
+    """
+    m = marginals(inst, phi)
+    min_margin = jnp.minimum(m.delta_e.min(-1), m.delta_c)   # (A,K1,V)
+    exc_e = jnp.where(phi.e > active_eps,
+                      m.delta_e - min_margin[..., None], 0.0)
+    exc_c = jnp.where(phi.c > active_eps, m.delta_c - min_margin, 0.0)
+    return jnp.maximum(exc_e.max(axis=(1, 2, 3)), exc_c.max(axis=(1, 2)))
+
+
 def satisfies_sufficiency(inst: Instance, phi: Phi, tol: float = 1e-3) -> bool:
     return bool(sufficiency_residual(inst, phi) <= tol)
 

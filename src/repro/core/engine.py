@@ -241,8 +241,23 @@ def gp_step(
     blocked: str = "bitset",
     axis: Optional[str] = None,
     accel: Optional[AccelConfig] = None,
+    app_mask: Optional[jnp.ndarray] = None,
 ) -> GPState:
-    """One fused GP iteration; ``axis`` selects the F/G reduction (above)."""
+    """One fused GP iteration; ``axis`` selects the F/G reduction (above).
+
+    ``app_mask`` ((A,) bool, optional) freezes applications: where False,
+    the committed strategy rows are the *incoming* ``phi`` rows regardless
+    of what the projection proposes, and the reported residual ignores the
+    frozen applications' directions.  The freeze is applied *inside* each
+    ladder candidate before its flows are measured, so the evaluated costs
+    are exactly the costs of the committed strategies — frozen applications
+    still contribute their (unchanged) flows to the shared F/G measurement,
+    which is what makes the restricted solve exact for the active set.
+    This is the §16 residual skip gate (``serve/online.py``): applications
+    whose sufficiency residual an event left below tolerance are frozen,
+    re-checked after the active set converges, and unfrozen only if the
+    active set's movement pushed them back above tolerance.
+    """
     # One batched LU of every (app, stage) system per iteration: the traffic
     # sweep solves the transposed systems and the marginal recursion the
     # plain ones from the SAME factors (traffic.stage_factors, DESIGN.md
@@ -308,6 +323,13 @@ def gp_step(
             e=phi.e - red_e + share[..., None] * is_min_e,
             c=phi.c - red_c + share * is_min_c,
         ))
+        if app_mask is not None:
+            # frozen apps keep their incoming rows; applied BEFORE the flow
+            # measurement so the ladder costs what it would actually commit
+            cand = Phi(
+                e=jnp.where(app_mask[:, None, None, None], cand.e, phi.e),
+                c=jnp.where(app_mask[:, None, None], cand.c, phi.c),
+            )
         cand_fl = flows(inst, cand, solver=solver, axis=axis)
         valid = traffic_is_valid(inst, cand_fl.t, axis=axis)
         c_links = jnp.where(inst.adj, costs.cost(inst.link_kind, cand_fl.F, inst.link_param), 0.0)
@@ -345,6 +367,11 @@ def gp_step(
     else:
         exc_e = jnp.where(phi.e > 1e-6, m.delta_e - min_delta[..., None], 0.0)
         exc_c = jnp.where(phi.c > 1e-6, m.delta_c - min_delta, 0.0)
+    if app_mask is not None:
+        # the stop latch must not wait on frozen apps: their drift is
+        # re-checked by the caller's outer gate, not by this solve
+        exc_e = jnp.where(app_mask[:, None, None, None], exc_e, 0.0)
+        exc_c = jnp.where(app_mask[:, None, None], exc_c, 0.0)
     residual = _pmax(jnp.maximum(jnp.max(exc_e), jnp.max(exc_c)), axis)
 
     return GPState(phi=new_phi, cost=cand_costs[best], residual=residual,
@@ -435,6 +462,49 @@ def init_carry(inst: Instance, phi: Phi, *, solver: str = "auto",
     )
 
 
+def reset_carry(inst: Instance, phi: Phi, carry: ScanCarry, *,
+                keep_window: bool = False, solver: str = "auto",
+                axis: Optional[str] = None) -> ScanCarry:
+    """Re-arm a converged carry for a new re-convergence (online events).
+
+    Rebuilds the bookkeeping fields around the (possibly repaired) live
+    strategy ``phi`` — fresh cost/best-cost at the *current* instance,
+    cleared stall/done/iters latches — while optionally carrying the §15
+    acceleration state across the event:
+
+      * ``keep_window=True`` keeps the Anderson ring buffers and the
+        adaptive stepsize.  Correct for *small rate deltas*: the stored
+        (x, f) pairs were evaluated under the old rates, so the mixer's
+        extrapolation is approximate, but the scan body's safeguard
+        (projected-feasible AND no-worse-than-the-plain-step, costed under
+        the NEW instance) rejects any mix the stale history misleads —
+        descent is preserved, and on small deltas the stale window still
+        cuts the re-convergence (DESIGN.md §16).
+      * ``keep_window=False`` (default) zeroes the window — required after
+        topology events (failures, arrivals), where the fixed-point map
+        itself changed shape and stale pairs are pure noise.
+
+    The carry's pytree structure (accel slab sizes) is preserved either
+    way, so re-armed carries keep hitting the compiled chunk programs.
+    """
+    cost0 = jnp.asarray(total_cost(inst, phi, solver=solver, axis=axis),
+                        jnp.float32)
+    keep = jnp.asarray(keep_window)
+    return carry._replace(
+        phi=phi,
+        best_cost=cost0,
+        stall=jnp.int32(0),
+        done=jnp.asarray(False),
+        iters=jnp.int32(0),
+        cost=cost0,
+        residual=jnp.float32(jnp.inf),
+        alpha=jnp.where(keep, carry.alpha, jnp.float32(0.0)),
+        ax=jnp.where(keep, carry.ax, jnp.zeros_like(carry.ax)),
+        af=jnp.where(keep, carry.af, jnp.zeros_like(carry.af)),
+        ak=jnp.where(keep, carry.ak, jnp.int32(0)),
+    )
+
+
 def scan_chunk(
     inst: Instance,
     carry: ScanCarry,
@@ -447,6 +517,7 @@ def scan_chunk(
     blocked: str = "bitset",
     axis: Optional[str] = None,
     accel: Optional[AccelConfig] = None,
+    app_mask: Optional[jnp.ndarray] = None,
 ):
     """Advance the solve by up to ``length`` iterations entirely on device.
 
@@ -483,7 +554,8 @@ def scan_chunk(
         else:
             alpha_eff = alpha
         state = gp_step(inst, c.phi, alpha_eff, allowed_e, allowed_c, scaled,
-                        solver, blocked=blocked, axis=axis, accel=accel)
+                        solver, blocked=blocked, axis=axis, accel=accel,
+                        app_mask=app_mask)
 
         new_phi, new_cost = state.phi, state.cost
         ax, af, ak = c.ax, c.af, c.ak
@@ -493,6 +565,15 @@ def scan_chunk(
             mix = _anderson_mix(ax, af, ak, x_k, f_k,
                                 accel.anderson_reg, axis)
             phi_mix = renormalize(inst, _unflat_phi(mix, c.phi))
+            if app_mask is not None:
+                # the mixer extrapolates over the full flattened phi; frozen
+                # apps must stay exactly frozen (applied before costing, so
+                # the safeguard evaluates the committed strategy)
+                phi_mix = Phi(
+                    e=jnp.where(app_mask[:, None, None, None],
+                                phi_mix.e, c.phi.e),
+                    c=jnp.where(app_mask[:, None, None], phi_mix.c, c.phi.c),
+                )
             cost_mix = _strategy_cost(inst, phi_mix, solver, axis)
             cost_mix = jnp.where(jnp.isnan(cost_mix), jnp.inf, cost_mix)
             feas = _pmax(

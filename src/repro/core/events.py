@@ -1,0 +1,455 @@
+"""Typed online events for the streaming solver service (DESIGN.md §16).
+
+The paper's Section IV argues the distributed GP algorithm "adapts to
+changes in input rates and network topology, and can be implemented as an
+online algorithm".  This module gives that claim a concrete event model: a
+small algebra of typed events over a *fleet* of padded instances —
+
+  * :class:`RateScale`      — an application's exogenous input rates scale
+  * :class:`LinkDown` / :class:`LinkUp`   — a directed link fails / recovers
+  * :class:`NodeDown`       — a node fails (all incident links, local rates)
+  * :class:`AppArrival` / :class:`AppDeparture` — a service chain joins /
+    leaves, using the spare application slots of the padded envelope
+
+— plus :func:`apply_event`, the pure host-side transition
+``Instance -> Instance`` that also reports what the event disturbed (an
+:class:`EventEffect`), and :func:`random_trace`, a feasibility-preserving
+trace generator for benchmarks and tests.
+
+Events reference fleet members by index; each event touches exactly one
+member.  ``apply_event`` operates on a single (padded) member instance and
+never changes array shapes — topology and application churn happen *within*
+the padded envelope, which is what lets ``serve.online.OnlineSolver`` keep
+one compiled device program across the whole event stream (§9 padding
+invariants do the heavy lifting: a departed app is just a dead app row).
+
+Feasibility discipline of :func:`random_trace`: a link or node failure is
+only emitted if afterwards every live node still reaches every live
+application's destination (BFS check), so the repaired strategy
+(``traffic.repair_phi``) always has a finite-cost route to fall back on;
+rate scalings keep each application's cumulative factor inside a bounded
+window so the queueing cost families stay in their stable region.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch
+from repro.core.network import Instance
+
+# ---------------------------------------------------------------------------
+# Event types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RateScale:
+    """Scale application ``app``'s input rates by ``factor`` (all apps of
+    the member when ``app`` is None)."""
+
+    member: int
+    factor: float
+    app: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDown:
+    """Directed link (i, j) fails: removed from the graph, capacity zeroed."""
+
+    member: int
+    i: int
+    j: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkUp:
+    """Directed link (i, j) (re)appears with the given capacity/coefficient."""
+
+    member: int
+    i: int
+    j: int
+    capacity: float
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeDown:
+    """Node fails: every incident link removed, exogenous input at the node
+    zeroed; applications destined *to* the node depart."""
+
+    member: int
+    node: int
+
+
+@dataclasses.dataclass(frozen=True)
+class AppArrival:
+    """A new service chain occupies dead application slot ``app``.
+
+    ``rates`` is a tuple of (source node, rate) pairs.  Packet sizes follow
+    the paper's ``L_(a,k) = 10 - 5k`` profile (floored at 0.01, DESIGN.md
+    §8) and computation weights are 1 for every computed task.
+    """
+
+    member: int
+    app: int
+    dst: int
+    rates: tuple = ()
+    n_tasks: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class AppDeparture:
+    """Application slot ``app`` leaves: its rates and stages are cleared and
+    the slot becomes a dead row under the §9 padding invariants."""
+
+    member: int
+    app: int
+
+
+Event = Union[RateScale, LinkDown, LinkUp, NodeDown, AppArrival, AppDeparture]
+
+# Anderson-window carry policy (§16): a rate delta whose factor sits inside
+# this window is "small" — the optimum moves continuously, so the solver may
+# keep its §15 acceleration history across the event.
+SMALL_RATE_WINDOW = (0.5, 2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class EventEffect:
+    """What :func:`apply_event` disturbed, for the solver's skip gates.
+
+    ``topology``   — the direction sets changed (links/nodes/apps appeared
+                     or vanished): the strategy needs ``traffic.repair_phi``
+                     and the acceleration window must be cleared.
+    ``small``      — a rate delta inside :data:`SMALL_RATE_WINDOW`: the
+                     Anderson window may be carried across the event.
+    ``touched``    — (A,) bool: applications whose *own* problem data
+                     changed.  Everything else is only disturbed through
+                     shared congestion, which the per-app sufficiency
+                     residual gate detects (``conditions.per_app_residual``).
+    ``dead_links`` — directed links this event removed; the solver marks
+                     applications carrying strategy mass on them as touched
+                     (the effect itself cannot, as it never sees phi).
+    """
+
+    topology: bool
+    small: bool
+    touched: np.ndarray
+    dead_links: tuple = ()
+
+
+# ---------------------------------------------------------------------------
+# Event application (pure, host-side)
+# ---------------------------------------------------------------------------
+
+
+def _default_chain(K1: int, n_tasks: int):
+    """Packet sizes / weights / stage mask of the builder's default chain."""
+    L = np.maximum(10.0 - 5.0 * np.arange(K1), 0.01)
+    w = np.where(np.arange(K1) < n_tasks, 1.0, 0.0)
+    mask = np.arange(K1) <= n_tasks
+    return L, w, mask
+
+
+def apply_event(inst: Instance, ev: Event) -> tuple[Instance, EventEffect]:
+    """Apply one event to a (padded) member instance.
+
+    Pure: returns a new :class:`Instance` with identical array shapes plus
+    an :class:`EventEffect` describing the disturbance.  Raises ValueError
+    for structurally invalid events (dead slot arrivals excepted — arriving
+    into a live slot, failing a non-existent link, ...), so traces written
+    by hand fail loudly instead of silently solving the wrong problem.
+    """
+    A = inst.A
+    touched = np.zeros(A, dtype=bool)
+
+    if isinstance(ev, RateScale):
+        if ev.app is None:
+            r = inst.r * ev.factor
+            touched[:] = np.asarray(inst.stage_mask).any(axis=1)
+        else:
+            r = inst.r.at[ev.app].multiply(ev.factor)
+            touched[ev.app] = True
+        lo, hi = SMALL_RATE_WINDOW
+        small = lo <= ev.factor <= hi
+        new = dataclasses.replace(inst, r=r)
+        return new, EventEffect(topology=False, small=small, touched=touched)
+
+    if isinstance(ev, LinkDown):
+        if not bool(inst.adj[ev.i, ev.j]):
+            raise ValueError(f"LinkDown({ev.i},{ev.j}): link does not exist")
+        new = dataclasses.replace(
+            inst,
+            adj=inst.adj.at[ev.i, ev.j].set(False),
+            link_param=inst.link_param.at[ev.i, ev.j].set(0.0),
+        )
+        return new, EventEffect(topology=True, small=False, touched=touched,
+                                dead_links=((ev.i, ev.j),))
+
+    if isinstance(ev, LinkUp):
+        if bool(inst.adj[ev.i, ev.j]):
+            raise ValueError(f"LinkUp({ev.i},{ev.j}): link already exists")
+        if ev.i == ev.j or ev.capacity <= 0:
+            raise ValueError(f"LinkUp({ev.i},{ev.j}): invalid link")
+        new = dataclasses.replace(
+            inst,
+            adj=inst.adj.at[ev.i, ev.j].set(True),
+            link_param=inst.link_param.at[ev.i, ev.j].set(ev.capacity),
+        )
+        # Nobody's data changed; apps that *should* use the new link are
+        # caught by the residual gate (the new direction lowers min_margin).
+        return new, EventEffect(topology=True, small=False, touched=touched)
+
+    if isinstance(ev, NodeDown):
+        v = ev.node
+        adj_np = np.asarray(inst.adj)
+        if not (adj_np[v].any() or adj_np[:, v].any()):
+            raise ValueError(f"NodeDown({v}): node already dead")
+        dead = tuple((v, int(j)) for j in np.flatnonzero(adj_np[v])) + \
+            tuple((int(i), v) for i in np.flatnonzero(adj_np[:, v]))
+        adj = inst.adj.at[v, :].set(False).at[:, v].set(False)
+        link_param = inst.link_param.at[v, :].set(0.0).at[:, v].set(0.0)
+        r = inst.r.at[:, v].set(0.0)
+        touched = np.array(inst.r[:, v] > 0)
+        # Applications destined to the failed node depart with it.
+        gone = np.asarray(inst.dst == v) & np.asarray(inst.stage_mask).any(1)
+        stage_mask = jnp.where(gone[:, None], False, inst.stage_mask)
+        r = jnp.where(gone[:, None], 0.0, r)
+        touched &= ~gone
+        new = dataclasses.replace(inst, adj=adj, link_param=link_param,
+                                  r=r, stage_mask=stage_mask)
+        return new, EventEffect(topology=True, small=False, touched=touched,
+                                dead_links=dead)
+
+    if isinstance(ev, AppArrival):
+        a = ev.app
+        if bool(inst.stage_mask[a].any()):
+            raise ValueError(f"AppArrival: slot {a} is live")
+        if ev.n_tasks + 1 > inst.K1:
+            raise ValueError(f"AppArrival: chain needs K1 >= {ev.n_tasks + 1}")
+        L_row, w_row, mask_row = _default_chain(inst.K1, ev.n_tasks)
+        r_row = np.zeros(inst.V)
+        for node, rate in ev.rates:
+            r_row[node] = rate
+        new = dataclasses.replace(
+            inst,
+            L=inst.L.at[a].set(jnp.asarray(L_row, dtype=inst.L.dtype)),
+            w=inst.w.at[a].set(jnp.asarray(w_row, dtype=inst.w.dtype)),
+            r=inst.r.at[a].set(jnp.asarray(r_row, dtype=inst.r.dtype)),
+            dst=inst.dst.at[a].set(ev.dst),
+            n_tasks=inst.n_tasks.at[a].set(ev.n_tasks),
+            stage_mask=inst.stage_mask.at[a].set(jnp.asarray(mask_row)),
+        )
+        touched[a] = True
+        return new, EventEffect(topology=True, small=False, touched=touched)
+
+    if isinstance(ev, AppDeparture):
+        a = ev.app
+        if not bool(inst.stage_mask[a].any()):
+            raise ValueError(f"AppDeparture: slot {a} already dead")
+        new = dataclasses.replace(
+            inst,
+            r=inst.r.at[a].set(0.0),
+            stage_mask=inst.stage_mask.at[a].set(False),
+            n_tasks=inst.n_tasks.at[a].set(0),
+        )
+        # The departed app needs no solving (its rows become degenerate and
+        # renormalize zeroes them); survivors are relieved congestion, which
+        # the residual gate picks up.
+        return new, EventEffect(topology=True, small=False, touched=touched)
+
+    raise TypeError(f"unknown event type {type(ev).__name__}")
+
+
+def replay(members: Sequence[Instance], trace: Sequence[Event]):
+    """Replay a trace over a member list; yields (event, instance, effect)
+    with ``instance`` the event's member *after* the event."""
+    members = list(members)
+    out = []
+    for ev in trace:
+        members[ev.member], eff = apply_event(members[ev.member], ev)
+        out.append((ev, members[ev.member], eff))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fleet construction
+# ---------------------------------------------------------------------------
+
+
+def pad_fleet(insts: Sequence[Instance], spare_apps: int = 0) -> list[Instance]:
+    """Pad a fleet to its common envelope plus ``spare_apps`` extra dead
+    application slots per member (room for :class:`AppArrival` events).
+
+    Members stay separate instances (stack with ``batch.pad_instances`` /
+    ``jax.tree_util.tree_map``); shapes are already uniform so event replay
+    and the online solver agree on slot indices.
+    """
+    V, A, K1 = batch.batch_envelope(insts)
+    return [batch.pad_instance(i, V, A + spare_apps, K1) for i in insts]
+
+
+# ---------------------------------------------------------------------------
+# Trace generation
+# ---------------------------------------------------------------------------
+
+
+def _reaches_all_dsts(adj: np.ndarray, dsts: Sequence[int]) -> bool:
+    """True iff every node with an outgoing link reaches every dst in
+    ``dsts`` (reverse BFS from each destination)."""
+    live = adj.any(axis=1)
+    for d in dsts:
+        seen = np.zeros(adj.shape[0], dtype=bool)
+        seen[d] = True
+        stack = [int(d)]
+        while stack:
+            v = stack.pop()
+            for u in np.flatnonzero(adj[:, v] & ~seen):
+                seen[u] = True
+                stack.append(int(u))
+        if not bool(seen[live].all()):
+            return False
+    return True
+
+
+def random_trace(
+    members: Sequence[Instance],
+    n_events: int = 50,
+    seed: int = 0,
+    *,
+    p_rate: float = 0.5,
+    p_topology: float = 0.3,
+    p_app: float = 0.2,
+    rate_window: tuple = (0.4, 1.6),
+) -> list[Event]:
+    """Sample a deterministic, feasibility-preserving event trace.
+
+    Works on an already-padded fleet (see :func:`pad_fleet`) so arrival
+    events can use the spare application slots.  Guarantees, by replaying
+    its own events while sampling:
+
+      * failures keep every live node connected to every live destination
+        (so ``traffic.repair_phi`` always has a finite-cost fallback);
+      * at least one application stays live per member;
+      * per-app cumulative rate factors stay inside ``rate_window`` of the
+        member's starting rates (bounded congestion);
+      * ``LinkUp`` only restores previously failed links at their original
+        capacity; arrivals only fill dead slots.
+
+    Deterministic in ``seed``; infeasible draws fall back to a RateScale.
+    """
+    rng = np.random.default_rng(seed)
+    state = [m for m in members]
+    failed: list[list[tuple]] = [[] for _ in members]          # [(i, j, cap)]
+    cum = [np.ones(m.A) for m in members]                      # rate factors
+    orig_cap = [np.asarray(m.link_param).copy() for m in members]
+
+    def alive_apps(m):
+        return np.flatnonzero(np.asarray(state[m].stage_mask).any(axis=1))
+
+    def live_nodes(m):
+        return np.flatnonzero(np.asarray(state[m].adj).any(axis=1))
+
+    def live_dsts(m):
+        inst = state[m]
+        return [int(np.asarray(inst.dst)[a]) for a in alive_apps(m)]
+
+    def commit(ev):
+        state[ev.member], _ = apply_event(state[ev.member], ev)
+        trace.append(ev)
+
+    def sample_rate(m) -> Event:
+        apps = alive_apps(m)
+        a = int(rng.choice(apps))
+        choices = np.array([0.6, 0.8, 1.25, 1.5, 2.0])
+        ok = [f for f in choices
+              if rate_window[0] <= cum[m][a] * f <= rate_window[1]]
+        factor = float(rng.choice(ok)) if ok else float(1.0 / cum[m][a])
+        cum[m][a] *= factor
+        return RateScale(member=m, factor=factor, app=a)
+
+    def sample_link_down(m) -> Optional[Event]:
+        adj = np.asarray(state[m].adj)
+        links = np.argwhere(adj)
+        rng.shuffle(links)
+        dsts = live_dsts(m)
+        for i, j in links[:32]:
+            cand = adj.copy()
+            cand[i, j] = False
+            if _reaches_all_dsts(cand, dsts):
+                failed[m].append((int(i), int(j), float(orig_cap[m][i, j])))
+                return LinkDown(member=m, i=int(i), j=int(j))
+        return None
+
+    def sample_link_up(m) -> Optional[Event]:
+        if not failed[m]:
+            return None
+        i, j, cap = failed[m].pop(int(rng.integers(len(failed[m]))))
+        return LinkUp(member=m, i=i, j=j, capacity=cap)
+
+    def sample_node_down(m) -> Optional[Event]:
+        inst = state[m]
+        adj = np.asarray(inst.adj)
+        dst_set = set(live_dsts(m))
+        nodes = [v for v in live_nodes(m) if v not in dst_set]
+        rng.shuffle(nodes)
+        for v in nodes[:16]:
+            cand = adj.copy()
+            cand[v, :] = False
+            cand[:, v] = False
+            if _reaches_all_dsts(cand, live_dsts(m)):
+                # Incident links of a dead node are not individually
+                # restorable — drop them from the LinkUp pool.
+                failed[m] = [(i, j, c) for i, j, c in failed[m]
+                             if i != v and j != v]
+                return NodeDown(member=m, node=int(v))
+        return None
+
+    def sample_app(m) -> Optional[Event]:
+        inst = state[m]
+        mask = np.asarray(inst.stage_mask).any(axis=1)
+        dead_slots = np.flatnonzero(~mask)
+        apps = alive_apps(m)
+        want_arrival = len(dead_slots) > 0 and (
+            len(apps) <= 1 or rng.random() < 0.6)
+        if want_arrival and len(dead_slots) > 0:
+            a = int(dead_slots[0])
+            nodes = live_nodes(m)
+            if len(nodes) < 2:
+                return None
+            dst = int(rng.choice(nodes))
+            n_src = min(int(rng.integers(2, 4)), len(nodes) - 1)
+            srcs = rng.choice([v for v in nodes if v != dst],
+                              size=n_src, replace=False)
+            rates = tuple((int(s), float(rng.uniform(0.3, 0.8)))
+                          for s in srcs)
+            cum[m][a] = 1.0
+            return AppArrival(member=m, app=a, dst=dst, rates=rates)
+        if len(apps) > 1:
+            return AppDeparture(member=m, app=int(rng.choice(apps)))
+        return None
+
+    trace: list[Event] = []
+    kinds = np.array([p_rate, p_topology, p_app]) / (p_rate + p_topology + p_app)
+    while len(trace) < n_events:
+        m = int(rng.integers(len(members)))
+        kind = rng.choice(3, p=kinds)
+        ev: Optional[Event] = None
+        if kind == 1:
+            topo = rng.random()
+            if topo < 0.45:
+                ev = sample_link_down(m)
+            elif topo < 0.75:
+                ev = sample_link_up(m)
+            else:
+                ev = sample_node_down(m)
+        elif kind == 2:
+            ev = sample_app(m)
+        if ev is None:
+            ev = sample_rate(m)
+        commit(ev)
+    return trace

@@ -261,7 +261,7 @@ _init_carry = engine.init_carry
 def _scan_chunk(
     inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
     *, length: int, scaled: bool = False, solver: str = "auto",
-    blocked: str = "bitset", accel=None,
+    blocked: str = "bitset", accel=None, app_mask=None,
 ):
     """Jitted single-device wrapper over :func:`engine.scan_chunk`.
 
@@ -269,12 +269,13 @@ def _scan_chunk(
     ``done`` latch freezes the carry and subsequent steps re-emit the
     converged (cost, residual), keeping history shapes static.  ``accel``
     is a resolved :class:`engine.AccelConfig` (or None) riding as a static
-    argument — each distinct config compiles its own program.
+    argument — each distinct config compiles its own program.  ``app_mask``
+    ((A,) bool or None) freezes applications (the §16 skip gate).
     """
     return engine.scan_chunk(
         inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
         length=length, scaled=scaled, solver=solver, blocked=blocked,
-        axis=None, accel=accel)
+        axis=None, accel=accel, app_mask=app_mask)
 
 
 def solve_scan(
@@ -291,6 +292,7 @@ def solve_scan(
     solver: str = "auto",
     blocked: str = "bitset",
     accel=None,
+    app_mask: Optional[jnp.ndarray] = None,
 ) -> GPScan:
     """Algorithm 1 as a single device-resident ``lax.scan``.
 
@@ -329,7 +331,7 @@ def solve_scan(
         inst, carry0, jnp.float32(alpha), jnp.float32(tol),
         jnp.int32(patience), jnp.int32(max_iters), allowed_e, allowed_c,
         length=max_iters, scaled=scaled, solver=solver, blocked=blocked,
-        accel=accel,
+        accel=accel, app_mask=app_mask,
     )
     return GPScan(
         phi=carry.phi, cost=carry.cost, residual=carry.residual,
@@ -369,6 +371,7 @@ def solve(
     solver: str = "auto",
     blocked: str = "bitset",
     accel=None,
+    app_mask: Optional[jnp.ndarray] = None,
 ) -> GPResult:
     """Run Algorithm 1 until the sufficiency residual falls below tol.
 
@@ -379,7 +382,10 @@ def solve(
 
     scaled=True enables the quasi-Newton diagonal preconditioner (paper
     Section IV remark on second-order methods).  accel=True (or an
-    :class:`engine.AccelConfig`) enables the §15 acceleration layer."""
+    :class:`engine.AccelConfig`) enables the §15 acceleration layer.
+    ``app_mask`` ((A,) bool) freezes applications (the §16 skip gate):
+    frozen apps keep their phi rows and still contribute their flows to
+    the shared F/G measurement, and the residual stop ignores them."""
     del track_every
     accel = engine.resolve_accel(accel)
     phi = phi0 if phi0 is not None else init_phi(inst)
@@ -394,7 +400,7 @@ def solve(
             inst, carry, alpha_, tol_, patience_, max_iters_,
             allowed_e, allowed_c,
             length=min(_SOLVE_CHUNK, max_iters - steps), scaled=scaled,
-            solver=solver, blocked=blocked, accel=accel,
+            solver=solver, blocked=blocked, accel=accel, app_mask=app_mask,
         )
         cost_chunks.append(cs)
         res_chunks.append(rs)
@@ -415,14 +421,14 @@ def solve(
 def _scan_chunk_batched(
     inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
     *, length: int, scaled: bool = False, solver: str = "auto",
-    blocked: str = "bitset", accel=None,
+    blocked: str = "bitset", accel=None, app_mask=None,
 ):
-    def one(i, c, ae, ac):
+    def one(i, c, ae, ac, am):
         return _scan_chunk(i, c, alpha, tol, patience, max_iters, ae, ac,
                            length=length, scaled=scaled, solver=solver,
-                           blocked=blocked, accel=accel)
+                           blocked=blocked, accel=accel, app_mask=am)
 
-    return jax.vmap(one)(inst, carry, allowed_e, allowed_c)
+    return jax.vmap(one)(inst, carry, allowed_e, allowed_c, app_mask)
 
 
 def _gather(tree, idx: jnp.ndarray):

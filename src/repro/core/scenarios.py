@@ -144,12 +144,53 @@ def _mixed_topology(**kw) -> list[Scenario]:
     ]
 
 
+def _online_trace(**kw) -> list[Scenario]:
+    """Event-trace replay family: the fig6 fleet after each event of an
+    online trace (DESIGN.md §16).
+
+    Expands to one Scenario per event — the *post-event* instance of the
+    event's member — so cold-solving this family with :func:`run_sweep`
+    yields the per-event cold baseline the online solver
+    (``serve.online.OnlineSolver``) is benchmarked against.  Every member
+    is padded to the fleet envelope (plus ``spare_apps`` dead application
+    slots for arrivals), so the family always batches into one group.
+
+    kwargs: ``scenario`` (Table II name), ``scales`` (fleet rate ladder),
+    ``seed``, ``n_events``, ``spare_apps``, and optionally an explicit
+    ``trace`` (list of ``events.Event``) to replay instead of sampling.
+    """
+    from repro.core import events
+
+    name = kw.get("scenario", "abilene")
+    scales = kw.get("scales", FIG6_SCALES)
+    seed = kw.get("seed", 0)
+    n_events = kw.get("n_events", 50)
+    spare = kw.get("spare_apps", 2)
+    insts = [network.table_ii_instance(name, seed=seed, rate_scale=s)
+             for s in scales]
+    members = events.pad_fleet(insts, spare_apps=spare)
+    trace = kw.get("trace")
+    if trace is None:
+        trace = events.random_trace(members, n_events=n_events, seed=seed)
+    out = []
+    for t, (ev, inst, _eff) in enumerate(events.replay(members, trace)):
+        out.append(Scenario(
+            label=f"{name}-ev{t:02d}-m{ev.member}",
+            instance=inst,
+            meta={"event": type(ev).__name__, "member": ev.member, "t": t,
+                  "table_ii": name, "seed": seed,
+                  "base_scale": scales[ev.member]},
+        ))
+    return out
+
+
 SWEEPS: dict[str, Callable[..., list[Scenario]]] = {
     "fig5": _fig5,
     "fig6-congestion": _fig6_congestion,
     "fig7-packetsize": _fig7_packetsize,
     "seed-ensemble": _seed_ensemble,
     "mixed-topology": _mixed_topology,
+    "online-trace": _online_trace,
 }
 
 

@@ -278,6 +278,58 @@ def renormalize(inst: Instance, phi: Phi) -> Phi:
     return Phi(e=e * scale[..., None], c=c * scale)
 
 
+def repair_phi(inst: Instance, phi: Phi, seed_phi: Optional[Phi] = None,
+               *, min_mass: float = 1e-3) -> Phi:
+    """Project a live strategy onto a (possibly changed) instance.
+
+    The online repair primitive (Section IV adaptivity; DESIGN.md §16):
+    after a topology event — link/node failure, application
+    arrival/departure — a previously feasible ``phi`` may carry mass on
+    directions that no longer exist.  ``repair_phi``
+
+      1. zeroes mass on dead links (``~adj``) and disallowed CPU rows,
+      2. reseeds rows that lost (almost) all their mass — total remaining
+         mass ``<= min_mass`` on a non-degenerate row — from ``seed_phi``,
+      3. renormalizes back onto the simplex constraints (1).
+
+    ``seed_phi`` should be a loop-free strategy valid for the NEW instance
+    (callers use ``gp.init_phi(new_inst)``, the uncongested shortest-path
+    strategy).  Without one, the fallback seeds full local offloading where
+    the CPU direction exists and a uniform spread over the surviving
+    out-links at final stages; the fallback keeps the output on the simplex
+    but — unlike a shortest-path seed — cannot guarantee loop-freedom of
+    the seeded rows, so prefer passing ``seed_phi``.
+
+    The threshold matters: a row that kept only a sliver of mass (say
+    ``1e-4`` on one surviving link) would be rescaled to route *everything*
+    there, which is feasible but can be a terrible (even invalid-traffic)
+    starting point; reseeding such rows instead costs nothing and keeps the
+    warm start loop-free.  Rows above the threshold rescale as usual —
+    that is exactly the renormalize repair the paper's adaptivity argument
+    relies on.
+
+    Invariants (property-tested in tests/test_online_properties.py): the
+    output satisfies constraint (1) exactly (``feasibility_violation`` ~ 0),
+    carries zero mass on non-links, and zero CPU mass where offloading is
+    not allowed.
+    """
+    e = jnp.where(inst.adj[None, None], jnp.maximum(phi.e, 0.0), 0.0)
+    c = jnp.maximum(phi.c, 0.0) * inst.cpu_allowed()[:, :, None]
+    tot = e.sum(-1) + c
+    empty = (tot <= min_mass) & ~inst.degenerate_mask()        # (A,K1,V)
+    if seed_phi is None:
+        cpu_ok = inst.cpu_allowed()[:, :, None]                # (A,K1,1)
+        out_deg = jnp.maximum(inst.adj.sum(-1, keepdims=True), 1)
+        uniform = inst.adj.astype(e.dtype) / out_deg           # (V,V)
+        seed_e = jnp.where(cpu_ok[..., None], 0.0,
+                           jnp.broadcast_to(uniform[None, None], e.shape))
+        seed_c = jnp.broadcast_to(cpu_ok.astype(c.dtype), c.shape)
+        seed_phi = Phi(e=seed_e, c=seed_c)
+    e = jnp.where(empty[..., None], seed_phi.e, e)
+    c = jnp.where(empty, seed_phi.c, c)
+    return renormalize(inst, Phi(e=e, c=c))
+
+
 def feasibility_violation(inst: Instance, phi: Phi) -> jnp.ndarray:
     """Max violation of constraint (1) — for tests and invariant checks."""
     tot = phi.e.sum(-1) + phi.c

@@ -1,1 +1,27 @@
-from repro.serve.engine import ServeEngine, make_serve_step  # noqa: F401
+"""Serving layer: the transformer serve engine and the online GP service.
+
+Imports are lazy: ``serve.engine`` pulls in the transformer model stack,
+which ``serve.online`` (pure solver service) does not need — importing one
+must not pay for the other.
+"""
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - static analysis only
+    from repro.serve.engine import ServeEngine, make_serve_step  # noqa: F401
+    from repro.serve.online import EventReport, OnlineSolver  # noqa: F401
+
+_ENGINE = ("ServeEngine", "make_serve_step", "make_prefill_step", "Request")
+_ONLINE = ("OnlineSolver", "EventReport")
+
+__all__ = list(_ENGINE + _ONLINE)
+
+
+def __getattr__(name):
+    if name in _ENGINE:
+        from repro.serve import engine
+        return getattr(engine, name)
+    if name in _ONLINE:
+        from repro.serve import online
+        return getattr(online, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

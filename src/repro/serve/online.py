@@ -1,0 +1,430 @@
+"""OnlineSolver: the GP solver as a long-running service (DESIGN.md §16).
+
+The paper's Section IV closes by noting the distributed algorithm "adapts
+to changes in input rates and network topology, and can be implemented as
+an online algorithm".  This module is that claim as a subsystem: a
+device-resident engine that holds the *live* forwarding/offloading strategy
+for a fleet of problem instances and re-converges incrementally as typed
+events (``core/events.py``) stream in.
+
+Architecture — everything rides the existing batched machinery:
+
+  * **Fleet state** — members are padded to one envelope
+    (``events.pad_fleet``, §9 invariants) and stacked into a single batched
+    Instance pytree; the live solver state is one batched
+    ``engine.ScanCarry`` whose ``phi`` is the fleet's current strategy.
+  * **Event ingestion** — ``apply_event`` rewrites the member's instance
+    *in place in the envelope* (no shape changes), so every re-convergence
+    reuses the same compiled chunk programs as ``gp.solve_batched``.
+  * **Warm start + phi repair** — re-convergence starts from the live
+    strategy; after topology events ``traffic.repair_phi`` masks dead
+    directions and reseeds emptied rows before the solver touches it.
+  * **Skip gates** — two levels.  Fleet members an event did not touch
+    never enter the device program (members are uncoupled).  Within the
+    touched member, ``conditions.per_app_residual`` is the gate: only
+    applications whose problem data changed, whose strategy carried mass on
+    a failed link, or whose sufficiency residual exceeds ``gate_tol`` are
+    unfrozen (``app_mask``); everyone else's strategy is provably optimal
+    already (condition (6) per app) and is frozen — their flows still count
+    in the shared F/G measurement, so the restricted solve is exact.  After
+    convergence the gate re-checks *all* apps and unfreezes any that
+    drifted (congestion moved under them); re-convergence repeats until the
+    full fleet member satisfies the residual, so final costs match a cold
+    solve.
+  * **Acceleration carry (§15)** — across *small rate deltas* (factor in
+    ``events.SMALL_RATE_WINDOW``) the Anderson window and adaptive stepsize
+    survive the event (``engine.reset_carry(keep_window=True)``): the
+    stored (x, f) pairs are stale but the scan body's safeguard costs every
+    mix under the NEW instance, so descent is preserved and the window
+    still cuts iterations.  Topology/app churn clears the window.
+
+Example::
+
+    >>> insts = [network.table_ii_instance("abilene", rate_scale=s)
+    ...          for s in (0.5, 1.0)]
+    >>> solver = OnlineSolver(insts, spare_apps=1, alpha=0.1, accel=True)
+    >>> rep = solver.process(events.RateScale(member=0, factor=1.5, app=0))
+    >>> rep.iterations < solver.cold_iters[0]          # doctest: +SKIP
+    True
+
+``benchmarks/online_bench.py`` drives a 50-event trace over the fig6
+family and records cost parity (<= 1e-4) and the warm/cold iteration ratio
+as BENCH_gp.json online rows; ``tests/test_online.py`` pins the semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch, conditions, engine, events, gp, traffic
+from repro.core.network import Instance
+from repro.core.traffic import Phi
+
+
+@dataclasses.dataclass(frozen=True)
+class EventReport:
+    """What one event cost the service.
+
+    ``iterations`` counts GP iterations actually committed for this event
+    (0 when every live app passed the skip gate); ``solved_apps`` /
+    ``skipped_apps`` split the member's live applications into gate-opened
+    and gate-frozen; ``unfroze`` counts apps the post-convergence re-check
+    promoted from frozen to solved (congestion drift); ``repaired`` /
+    ``kept_window`` record the phi-repair and Anderson-carry decisions.
+    """
+
+    event: events.Event
+    member: int
+    iterations: int
+    cost: float
+    residual: float
+    solved_apps: int
+    skipped_apps: int
+    unfroze: int
+    repaired: bool
+    kept_window: bool
+    cold_restart: bool = False
+
+
+class OnlineSolver:
+    """Device-resident online GP service over a fleet of instances.
+
+    Parameters mirror ``gp.solve`` (alpha/tol/patience/max_iters/solver/
+    blocked/accel apply to every re-convergence).  ``spare_apps`` reserves
+    dead application slots per member for :class:`events.AppArrival`;
+    ``gate_tol`` (default: ``tol``) is the per-app residual threshold of
+    the skip gate — apps below it are provably within tolerance of
+    stationary and are frozen; ``carry_window=False`` disables the §15
+    Anderson-window carry across small rate deltas (ablation hook).
+
+    Construction cold-solves the whole fleet in one batched program;
+    per-member cold iteration counts are kept in ``cold_iters`` as the
+    warm-start baseline.  ``process`` ingests one event, ``step`` a list.
+    """
+
+    def __init__(
+        self,
+        insts: Sequence[Instance],
+        *,
+        spare_apps: int = 0,
+        alpha: float = 0.02,
+        tol: float = 1e-4,
+        gate_tol: Optional[float] = None,
+        max_iters: int = 400,
+        patience: int = 40,
+        solver: str = "auto",
+        blocked: str = "bitset",
+        accel=True,
+        carry_window: bool = True,
+        max_unfreeze_rounds: int = 4,
+        plateau_res: Optional[float] = None,
+    ):
+        self._members = events.pad_fleet(insts, spare_apps=spare_apps)
+        self.binst: Instance = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *self._members)
+        self.B = len(self._members)
+        self.tol = float(tol)
+        self.gate_tol = float(tol if gate_tol is None else gate_tol)
+        self.max_iters = int(max_iters)
+        self.solver = solver
+        self.blocked = blocked
+        self.carry_window = bool(carry_window)
+        self.max_unfreeze_rounds = int(max_unfreeze_rounds)
+        # Warm-start plateau detector (see _converge): a repaired strategy
+        # can itself be a *spurious* near-fixed point of the GP map — the
+        # residual starts tiny but the ladder crawls on micro-improvements
+        # for hundreds of iterations (healthy warm starts begin at residual
+        # ~1e-1 and drop fast).  If after the first chunk the member is not
+        # done yet its residual is already below this, restarting cold is
+        # strictly faster AND lands on the same optimum as the cold
+        # baseline, preserving cost parity.
+        self.plateau_res = float(20 * tol if plateau_res is None else plateau_res)
+        self._accel = engine.resolve_accel(accel)
+        self._alpha = jnp.float32(alpha)
+        self._tol = jnp.float32(tol)
+        self._patience = jnp.int32(patience)
+        self._max_iters = jnp.int32(max_iters)
+        self._residual_fn = jax.jit(conditions.per_app_residual)
+
+        phi0 = jax.vmap(gp.init_phi)(self.binst)
+        self.carry: engine.ScanCarry = jax.vmap(
+            lambda i, p: engine.init_carry(i, p, accel=self._accel)
+        )(self.binst, phi0)
+
+        self.total_iters = 0                       # all committed iterations
+        self.reports: list[EventReport] = []
+        self.cold_iters, _ = self._converge(list(range(self.B)))
+        self.event_iters = 0                       # iterations after cold start
+
+    # -- fleet state accessors ------------------------------------------
+
+    def member(self, b: int) -> Instance:
+        """Member ``b``'s current (padded) problem instance."""
+        return self._members[b]
+
+    def phi(self, b: int) -> Phi:
+        """Member ``b``'s live strategy (padded to the fleet envelope)."""
+        return jax.tree_util.tree_map(lambda x: x[b], self.carry.phi)
+
+    def costs(self) -> np.ndarray:
+        """(B,) current aggregate delay of every fleet member."""
+        return np.asarray(self.carry.cost)
+
+    def residuals(self) -> np.ndarray:
+        """(B,) per-member sufficiency residual of the live strategies."""
+        out = np.zeros(self.B, np.float32)
+        for b in range(self.B):
+            res = np.asarray(self._residual_fn(self._members[b], self.phi(b)))
+            out[b] = res.max(initial=0.0)
+        return out
+
+    # -- event ingestion ------------------------------------------------
+
+    def process(self, ev: events.Event) -> EventReport:
+        """Ingest one event and re-converge its member incrementally."""
+        b = ev.member
+        inst_b, eff = events.apply_event(self._members[b], ev)
+        self._members[b] = inst_b
+        self.binst = jax.tree_util.tree_map(
+            lambda full, x: full.at[b].set(x), self.binst, inst_b)
+
+        phi_b = self.phi(b)
+        touched = np.array(eff.touched, dtype=bool)
+        repaired = False
+        if eff.topology:
+            # apps that routed over a now-dead link must re-solve even if
+            # repair leaves their residual small (their mass was moved)
+            for i, j in eff.dead_links:
+                touched |= np.asarray(
+                    phi_b.e[:, :, i, j].sum(axis=1)) > 1e-6
+            phi_b = traffic.repair_phi(inst_b, phi_b, gp.init_phi(inst_b))
+            repaired = True
+
+        live = np.asarray(inst_b.stage_mask).any(axis=1)
+        res = np.asarray(self._residual_fn(inst_b, phi_b))
+        # a non-finite residual means the (repaired) strategy drives some
+        # link past capacity — nothing about that app is provably stationary
+        active = (touched | ~np.isfinite(res) | (res > self.gate_tol)) & live
+        keep = (self.carry_window and eff.small and not eff.topology)
+
+        carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
+        carry_b = engine.reset_carry(inst_b, phi_b, carry_b,
+                                     keep_window=keep, solver=self.solver)
+        if not np.isfinite(float(carry_b.cost)):
+            active = live.copy()       # over-capacity strategy: solve everyone
+        if not active.any():
+            # every live app is provably stationary at the new instance:
+            # commit bookkeeping (cost under the new rates) and skip the solve
+            carry_b = carry_b._replace(
+                done=jnp.asarray(True),
+                residual=jnp.float32(res.max(initial=0.0)))
+            self._scatter_carry(b, carry_b)
+            rep = EventReport(
+                event=ev, member=b, iterations=0,
+                cost=float(carry_b.cost),
+                residual=float(res.max(initial=0.0)),
+                solved_apps=0, skipped_apps=int(live.sum()),
+                unfroze=0, repaired=repaired, kept_window=keep)
+            self.reports.append(rep)
+            return rep
+
+        self._scatter_carry(b, carry_b)
+        am = active
+        iters_total = 0
+        unfroze = 0
+        cold_restart = False
+
+        if isinstance(ev, (events.AppArrival, events.LinkUp)):
+            # Expansion policy: restart cold, no warm round.  Arrivals and
+            # restored links *expand the strategy space* — the incumbent
+            # strategy is stationary for the smaller problem and carries
+            # zero mass in the new directions (the new app's rows, the
+            # revived link), so the GP map crawls into them one
+            # alpha-limited step at a time while gp.init_phi simply
+            # redistributes.  Warm rounds on these events measure slower
+            # than the cold baseline itself; perturbation events (rates,
+            # failures) are where warm starts pay.
+            plateaued = True
+        else:
+            # warm round with the plateau probe: bail early if the repaired
+            # strategy turns out to be a spurious near-fixed point
+            it, plateaued = self._converge([b], app_mask=am[None, :],
+                                           plateau_res=self.plateau_res)
+            iters_total += int(it[0])
+            if not np.isfinite(float(self.carry.cost[b])):
+                # the repaired strategy exceeded some link capacity and the
+                # GP map cannot descend from an infinite cost (marginals are
+                # nan): a cold restart from gp.init_phi is the only sound
+                # recovery — and it is exactly the cold baseline, so parity
+                # is preserved
+                plateaued = True
+            elif eff.topology and int(it[0]) <= gp._CHUNK_MIN:
+                # a repaired strategy that latches done within the first
+                # chunk is suspect: mass was force-moved off dead links yet
+                # the residual certificate fired almost immediately, which
+                # in practice means a near-fixed point a hair above the
+                # optimum (residual <= tol only bounds *stationarity*, not
+                # the cost gap).  Restarting costs roughly the cold solve
+                # and lands bit-identically on the cold baseline's answer.
+                plateaued = True
+        if plateaued:
+            cold_restart = True
+            carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
+            carry_b = engine.reset_carry(inst_b, gp.init_phi(inst_b), carry_b,
+                                         keep_window=False, solver=self.solver)
+            self._scatter_carry(b, carry_b)
+            am = live.copy()          # a cold start moves every live app
+            it, _ = self._converge([b], app_mask=am[None, :])
+            iters_total += int(it[0])
+
+        res = np.asarray(self._residual_fn(inst_b, self.phi(b)))
+        for _round in range(self.max_unfreeze_rounds):
+            drifted = live & ~am & (~np.isfinite(res) | (res > self.gate_tol))
+            if not drifted.any():
+                break
+            # congestion moved under gate-frozen apps: unfreeze and go again
+            unfroze += int(drifted.sum())
+            am = am | drifted
+            carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
+            carry_b = engine.reset_carry(inst_b, carry_b.phi, carry_b,
+                                         keep_window=True, solver=self.solver)
+            self._scatter_carry(b, carry_b)
+            it, _ = self._converge([b], app_mask=am[None, :])
+            iters_total += int(it[0])
+            res = np.asarray(self._residual_fn(inst_b, self.phi(b)))
+
+        self.event_iters += iters_total
+        rep = EventReport(
+            event=ev, member=b, iterations=iters_total,
+            cost=float(self.carry.cost[b]),
+            residual=float(res.max(initial=0.0)),
+            solved_apps=int(am.sum()),
+            skipped_apps=int((live & ~am).sum()),
+            unfroze=unfroze, repaired=repaired, kept_window=keep,
+            cold_restart=cold_restart)
+        self.reports.append(rep)
+        return rep
+
+    def step(self, evs: Sequence[events.Event]) -> list[EventReport]:
+        """Ingest a list of events in order (the trace-replay entry point)."""
+        return [self.process(ev) for ev in evs]
+
+    # -- internals ------------------------------------------------------
+
+    def _scatter_carry(self, b: int, carry_b: engine.ScanCarry) -> None:
+        self.carry = jax.tree_util.tree_map(
+            lambda full, part: full.at[b].set(part), self.carry, carry_b)
+
+    def _converge(self, members: Sequence[int],
+                  app_mask: Optional[np.ndarray] = None,
+                  plateau_res: Optional[float] = None,
+                  ) -> tuple[np.ndarray, bool]:
+        """Run the affected members to convergence through the batched
+        chunk programs; returns (per-member committed iteration counts,
+        plateau flag).
+
+        Members are gathered into a power-of-two bucket (pad lanes
+        duplicate member 0 but start ``done``), so event-time solves hit
+        the same XLA cache entries regardless of how many members an event
+        touched; the chunk schedule mirrors ``gp.solve_batched``.
+
+        With ``plateau_res`` set, the run is probed once after the first
+        chunk: if any member is still running but its (gate-masked)
+        residual is already below ``plateau_res``, the warm start sits on a
+        spurious near-fixed point of the GP map — further iterations crawl
+        on micro-improvements — and the call returns early with the flag
+        set so the caller can restart cold.
+
+        A single member (every event — events touch exactly one member)
+        runs through the *unbatched* ``gp._scan_chunk`` program — the same
+        arithmetic as ``gp.solve`` — because the vmapped bucket-of-one
+        program rounds differently and its GP trajectories can take ~1.7x
+        the iterations to the same optimum (tie-breaks flip under the
+        batched fusion).  The batched path serves the initial fleet solve.
+        """
+        if len(members) == 1:
+            return self._converge_one(members[0], app_mask, plateau_res)
+        n = len(members)
+        bucket = batch.next_pow2(n)
+        sel = jnp.asarray(list(members) + [members[0]] * (bucket - n))
+        inst_s = jax.tree_util.tree_map(lambda x: x[sel], self.binst)
+        carry_s = jax.tree_util.tree_map(lambda x: x[sel], self.carry)
+        if bucket > n:
+            pad = jnp.arange(bucket) >= n
+            carry_s = carry_s._replace(done=carry_s.done | pad)
+        am = None
+        if app_mask is not None:
+            am_np = np.asarray(app_mask, dtype=bool)
+            am = jnp.asarray(np.concatenate(
+                [am_np, np.repeat(am_np[:1], bucket - n, axis=0)], axis=0))
+
+        steps, chunk = 0, gp._CHUNK_MIN
+        plateaued = False
+        while steps < self.max_iters:
+            length = min(chunk, gp._prev_pow2(self.max_iters - steps))
+            chunk = min(chunk * 2, gp._CHUNK_MAX)
+            carry_s, _ = gp._scan_chunk_batched(
+                inst_s, carry_s, self._alpha, self._tol, self._patience,
+                self._max_iters, None, None, length=length,
+                solver=self.solver, blocked=self.blocked,
+                accel=self._accel, app_mask=am)
+            steps += length
+            done = np.asarray(carry_s.done)
+            if bool(done.all()):
+                break
+            if plateau_res is not None:
+                res = np.asarray(carry_s.residual)[:n]
+                if bool((~done[:n] & (res <= plateau_res)).any()):
+                    plateaued = True
+                    break
+                plateau_res = None     # probe only the first chunk
+
+        upd = jnp.asarray(list(members))
+        self.carry = jax.tree_util.tree_map(
+            lambda full, part: full.at[upd].set(part[:n]),
+            self.carry, carry_s)
+        iters = np.asarray(carry_s.iters[:n]).copy()
+        self.total_iters += int(iters.sum())
+        return iters, plateaued
+
+    def _converge_one(self, b: int, app_mask: Optional[np.ndarray],
+                      plateau_res: Optional[float],
+                      ) -> tuple[np.ndarray, bool]:
+        """Single-member convergence through the unbatched chunk program
+        (bit-identical arithmetic to ``gp.solve``)."""
+        inst_b = self._members[b]
+        carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
+        am = None if app_mask is None else jnp.asarray(
+            np.asarray(app_mask, dtype=bool)[0])
+
+        steps, chunk = 0, gp._CHUNK_MIN
+        plateaued = suspect = False
+        while steps < self.max_iters:
+            length = min(chunk, gp._prev_pow2(self.max_iters - steps))
+            chunk = min(chunk * 2, gp._CHUNK_MAX)
+            carry_b, _ = gp._scan_chunk(
+                inst_b, carry_b, self._alpha, self._tol, self._patience,
+                self._max_iters, None, None, length=length,
+                solver=self.solver, blocked=self.blocked,
+                accel=self._accel, app_mask=am)
+            steps += length
+            if bool(carry_b.done):
+                break
+            if suspect:
+                # chunk 2 grace period expired without the done latch: this
+                # is a crawl, not a fixed point about to latch
+                plateaued = True
+                break
+            if plateau_res is not None:
+                suspect = float(carry_b.residual) <= plateau_res
+                plateau_res = None     # probe only the first chunk
+
+        self._scatter_carry(b, carry_b)
+        iters = np.asarray([int(carry_b.iters)], np.int32)
+        self.total_iters += int(iters.sum())
+        return iters, plateaued

@@ -13,6 +13,20 @@ if _SRC not in sys.path:
 # to launch/dryrun.py, which is exercised via subprocesses).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Property tests must draw the same examples on every run and every machine
+# (tier-1 regressions are diffed across commits).  When the real hypothesis
+# is installed, register and load a derandomized profile; the fallback shim
+# in tests/_hypothesis_compat.py is deterministic by construction.
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile(
+        "repro-deterministic", derandomize=True, deadline=None,
+        print_blob=False)
+    _hyp_settings.load_profile("repro-deterministic")
+except ModuleNotFoundError:
+    pass
+
 
 @pytest.fixture(autouse=True, scope="module")
 def _bound_jax_memory():

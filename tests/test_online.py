@@ -1,0 +1,126 @@
+"""Deterministic regression of the online GP service (DESIGN.md §16).
+
+Drives the example's event sequence (``examples/online_adaptation.py``)
+through :class:`repro.serve.OnlineSolver` and pins the service semantics:
+
+  * every event re-converges (finite cost, residual below threshold) and
+    tracks the cold optimum on the identical post-event instance;
+  * the per-app skip gate freezes provably-stationary applications;
+  * warm starts beat the cold restart strictly on the surge event;
+  * topology events repair phi (zero mass on the failed link) and clear
+    the Anderson window; small rate deltas keep it;
+  * events touch only their fleet member — the others' live strategies
+    are bit-identical before and after;
+  * the event layer validates inputs and its random traces replay
+    deterministically.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import events, gp, network, traffic
+from repro.serve import OnlineSolver
+
+ALPHA, TOL = 0.1, 1e-4
+
+
+def _cold(inst):
+    return gp.solve(inst, alpha=ALPHA, tol=TOL, accel=True)
+
+
+def test_online_service_tracks_cold_through_event_sequence():
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=0.5)
+    solver = OnlineSolver([inst], alpha=ALPHA, tol=TOL, accel=True)
+
+    # event 1: one app's rate jumps — the gate freezes the untouched apps
+    rep = solver.process(events.RateScale(member=0, factor=1.8, app=0))
+    assert rep.solved_apps == 1 and rep.skipped_apps == 2
+    assert rep.kept_window and not rep.repaired
+    cold = _cold(solver.member(0))
+    assert rep.cost <= cold.final_cost * (1 + 10 * TOL)
+
+    # event 2: global surge — warm start strictly beats the cold restart
+    rep = solver.process(events.RateScale(member=0, factor=2.0))
+    assert rep.kept_window            # 2.0 is inside SMALL_RATE_WINDOW
+    cold = _cold(solver.member(0))
+    assert rep.iterations < int(cold.iterations), (
+        rep.iterations, int(cold.iterations))
+    assert rep.cost <= cold.final_cost * 1.01
+
+    # event 3: busiest-link failure — phi repaired, window cleared
+    F = np.asarray(traffic.flows(solver.member(0), solver.phi(0)).F)
+    i, j = (int(x) for x in np.unravel_index(F.argmax(), F.shape))
+    rep = solver.process(events.LinkDown(member=0, i=i, j=j))
+    assert rep.repaired and not rep.kept_window
+    assert float(np.asarray(solver.phi(0).e)[:, :, i, j].max()) == 0.0
+    cold = _cold(solver.member(0))
+    assert rep.cost <= cold.final_cost * 1.01
+
+    # event 4: load falls back — the service lands back near the start
+    rep = solver.process(events.RateScale(member=0, factor=0.5))
+    cold = _cold(solver.member(0))
+    assert rep.cost <= cold.final_cost * 1.01
+
+    # service-level invariants after the whole sequence
+    assert np.isfinite(solver.costs()).all()
+    assert float(solver.residuals()[0]) <= 1e-3
+    assert solver.event_iters == sum(r.iterations for r in solver.reports)
+
+
+def test_events_touch_only_their_member():
+    insts = [network.table_ii_instance("abilene", seed=0, rate_scale=s)
+             for s in (0.5, 1.0)]
+    solver = OnlineSolver(insts, alpha=ALPHA, tol=TOL, accel=True)
+    e0 = np.asarray(solver.phi(0).e).copy()
+    c0 = np.asarray(solver.phi(0).c).copy()
+
+    rep = solver.process(events.RateScale(member=1, factor=1.5))
+    assert rep.member == 1
+    np.testing.assert_array_equal(np.asarray(solver.phi(0).e), e0)
+    np.testing.assert_array_equal(np.asarray(solver.phi(0).c), c0)
+
+
+def test_app_churn_stays_inside_padded_envelope():
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=1.0)
+    (m,) = events.pad_fleet([inst], spare_apps=1)
+    live0 = np.asarray(m.stage_mask).any(axis=1)
+    assert live0.sum() == inst.A and not live0[-1]
+    spare = int(np.flatnonzero(~live0)[0])
+
+    arr = events.AppArrival(member=0, app=spare, dst=8,
+                            rates=((1, 0.4), (6, 0.3)), n_tasks=2)
+    m2, eff = events.apply_event(m, arr)
+    live2 = np.asarray(m2.stage_mask).any(axis=1)
+    assert eff.topology and live2[spare] and live2.sum() == inst.A + 1
+    assert m2.r.shape == m.r.shape        # no shape change: same programs
+
+    m3, eff3 = events.apply_event(m2, events.AppDeparture(member=0, app=spare))
+    assert eff3.topology
+    assert np.asarray(m3.stage_mask).any(axis=1).sum() == inst.A
+    assert float(np.asarray(m3.r)[spare].max()) == 0.0
+
+
+def test_event_validation_and_trace_determinism():
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=1.0)
+    (m,) = events.pad_fleet([inst], spare_apps=1)
+
+    with pytest.raises(ValueError):        # link does not exist
+        events.apply_event(m, events.LinkDown(member=0, i=0, j=0))
+    with pytest.raises(ValueError):        # arrival into a live slot
+        events.apply_event(m, events.AppArrival(member=0, app=0, dst=8,
+                                                rates=((1, 0.4),)))
+    with pytest.raises(ValueError):        # departure of a dead slot
+        events.apply_event(m, events.AppDeparture(member=0, app=inst.A))
+
+    members = events.pad_fleet(
+        [network.table_ii_instance("abilene", seed=0, rate_scale=s)
+         for s in (0.5, 1.0)], spare_apps=1)
+    t1 = events.random_trace(members, n_events=20, seed=3)
+    t2 = events.random_trace(members, n_events=20, seed=3)
+    assert t1 == t2
+    assert len(t1) == 20
+    # every event in the trace must apply cleanly in sequence
+    snaps = events.replay(members, t1)
+    assert len(snaps) == 20

@@ -1,0 +1,49 @@
+"""Marker hygiene: packet-level simulation never runs in the quick tier.
+
+``simulate()`` burns seconds to minutes per call; CI's quick tier
+deselects ``-m "not slow"`` and must stay fast.  This audit walks every
+test module's AST and fails if a test function calls ``simulate`` (directly
+or as ``module.simulate``) without carrying ``@pytest.mark.slow`` — a
+regression that would otherwise surface only as a mysteriously slow CI
+quick tier.
+"""
+
+import ast
+import pathlib
+
+TESTS = pathlib.Path(__file__).parent
+
+
+def _calls_simulate(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            fn = sub.func
+            if isinstance(fn, ast.Name) and fn.id == "simulate":
+                return True
+            if isinstance(fn, ast.Attribute) and fn.attr == "simulate":
+                return True
+    return False
+
+
+def _is_slow_marked(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        # pytest.mark.slow, possibly called: pytest.mark.slow(...)
+        node = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(node, ast.Attribute) and node.attr == "slow":
+            return True
+    return False
+
+
+def test_every_simulate_caller_is_slow_marked():
+    offenders = []
+    for path in sorted(TESTS.glob("test_*.py")):
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.FunctionDef)
+                    and node.name.startswith("test_")
+                    and _calls_simulate(node)
+                    and not _is_slow_marked(node)):
+                offenders.append(f"{path.name}::{node.name}")
+    assert not offenders, (
+        "test functions call simulate() without @pytest.mark.slow: "
+        f"{offenders}")
