@@ -29,6 +29,16 @@ Rows land in BENCH_gp.json keyed (online, fig6-trace{N}, 11, *): the
 ``online`` solver row carries total seconds/iters plus the iteration ratio
 and worst parity; the two cold rows carry their own totals so future PRs
 can diff all three trajectories.
+
+``--chaos`` runs the §17 fault-tolerance leg instead: a seeded
+``faults.chaos_trace`` (flapping, destination-area node bursts,
+over-capacity surges, event storms) with a ``faults.FaultInjector``
+corrupting solver state at the solve boundary, under ``debug=True`` so the
+runtime invariant checker screens every event.  Asserts survival — every
+member ends feasible and finite, and no served cost ever exceeds the
+member's last-known-good incumbent on the current instance — and records a
+(online, chaos-trace{N}, 11, online-chaos) row with degradation-ladder hit
+counts, status tallies, injection/quarantine counts.
 """
 
 from __future__ import annotations
@@ -43,11 +53,14 @@ sys.path.insert(0, ".")
 import numpy as np
 
 from benchmarks.common import bench_record, save_json
-from repro.core import events, gp, network
+from repro.core import events, faults, gp, network
 from repro.core.scenarios import FIG6_SCALES
 from repro.serve.online import OnlineSolver
 
 ALPHA, TOL = 0.1, 1e-4
+# LKG bound used by the chaos assertions: the service's own rollback
+# margin (serve/online.py default) plus float32 re-costing headroom.
+LKG_MARGIN = 2e-4
 
 
 def run_trace(scales, n_events: int, seed: int, spare_apps: int = 2) -> dict:
@@ -108,13 +121,100 @@ def run_trace(scales, n_events: int, seed: int, spare_apps: int = 2) -> dict:
     }
 
 
+def run_chaos(scales, n_events: int, seed: int, spare_apps: int = 2) -> dict:
+    """The §17 survival leg: chaos trace + fault injection + debug checks."""
+    insts = [network.table_ii_instance("abilene", seed=seed, rate_scale=s)
+             for s in scales]
+    members = events.pad_fleet(insts, spare_apps=spare_apps)
+    steps = faults.chaos_trace(members, n_events=n_events, seed=seed)
+    injector = faults.FaultInjector(seed=seed + 1, p_inject=0.15)
+    solver = OnlineSolver(insts, spare_apps=spare_apps, alpha=ALPHA, tol=TOL,
+                          accel=True, debug=True, fault_injector=injector)
+
+    t0 = time.perf_counter()
+    reports = []
+    for batch in steps:
+        reports.extend(solver.step(batch))
+    chaos_s = time.perf_counter() - t0
+
+    # --- survival claims (hard failures, not recorded numbers) ---
+    # 1. every member's final served strategy is feasible and finite
+    final = solver.verify_fleet()
+    for h in final:
+        assert not h.corrupt, f"member {h.member} ends corrupt: {h}"
+        assert np.isfinite(h.cost), f"member {h.member} ends non-finite"
+    # 2. no served cost ever exceeded the member's last-known-good
+    #    incumbent re-costed on the SAME post-event instance ("rejected"
+    #    means nothing finite existed, incumbent included — nothing to bound)
+    for t, r in enumerate(reports):
+        if r.status == "rejected" or not np.isfinite(r.incumbent_cost):
+            continue
+        assert r.cost <= r.incumbent_cost * (1 + LKG_MARGIN), (
+            f"event {t}: served {r.cost} above incumbent {r.incumbent_cost}")
+
+    statuses: dict[str, int] = {}
+    for r in reports:
+        statuses[r.status] = statuses.get(r.status, 0) + 1
+    n_events_run = len(reports)
+    return {
+        "n_events": n_events_run, "n_steps": len(steps), "seed": seed,
+        "scales": list(scales), "chaos_s": chaos_s,
+        "online_iters": solver.event_iters,
+        "statuses": statuses,
+        "ladder_hits": dict(solver.ladder_hits),
+        "injections": len(injector.log),
+        "injected_members": sorted({i.member for i in injector.log}),
+        "quarantines": solver.quarantines,
+        "rollbacks": sum(1 for r in reports if r.rolled_back),
+        "shed_apps": sum(len(r.shed) for r in reports),
+        "final_costs": [h.cost for h in final],
+        "final_slack": [h.capacity_slack for h in final],
+    }
+
+
+def chaos_main(args) -> dict:
+    scales = FIG6_SCALES[:3] if args.smoke else FIG6_SCALES
+    n_events = 30 if args.smoke else args.events
+    out = run_chaos(scales, n_events, args.seed)
+
+    label = f"chaos-trace{n_events}"
+    bench_record("online", scenario=label, V=11, solver="online-chaos",
+                 seconds=out["chaos_s"], iters=out["online_iters"],
+                 events=out["n_events"], members=len(scales),
+                 statuses=out["statuses"], ladder_hits=out["ladder_hits"],
+                 injections=out["injections"],
+                 quarantines=out["quarantines"],
+                 rollbacks=out["rollbacks"], shed_apps=out["shed_apps"])
+    save_json(f"online_{label}.json", out)
+
+    print(f"chaos: events={out['n_events']} steps={out['n_steps']} "
+          f"members={len(scales)} seed={args.seed}")
+    print(f"online:      {out['online_iters']:5d} iters  "
+          f"{out['chaos_s']:.2f}s")
+    print(f"statuses:    {out['statuses']}")
+    print(f"ladder hits: {out['ladder_hits'] or '(none needed)'}")
+    print(f"injections:  {out['injections']} "
+          f"(members {out['injected_members']}), "
+          f"quarantines: {out['quarantines']}, "
+          f"rollbacks: {out['rollbacks']}, shed: {out['shed_apps']}")
+    print("OK: all members end feasible+finite; "
+          "served costs never exceeded the LKG incumbent")
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--events", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="small trace (10 events, 3 members) for CI")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the §17 chaos/fault-injection survival leg")
     args = ap.parse_args(argv)
+    if args.chaos:
+        if args.events == 50:
+            args.events = 100       # chaos default: the 100-event criterion
+        return chaos_main(args)
 
     scales = FIG6_SCALES[:3] if args.smoke else FIG6_SCALES
     n_events = 10 if args.smoke else args.events

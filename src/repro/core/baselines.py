@@ -120,6 +120,28 @@ def lpr_sc(inst: Instance) -> gp.GPResult:
                        residual_history=jnp.zeros((0,)), iterations=0)
 
 
+def fallback_strategy(inst: Instance, order: tuple = ("SPOC", "LCOF")):
+    """Pick the first finite-cost baseline strategy — the degradation
+    ladder's floor (DESIGN.md §17).
+
+    Tries each mask constructor in ``order`` and returns
+    ``(name, allowed_e, allowed_c, phi0, cost)`` for the first whose seed
+    point already has a finite total cost on ``inst``; the online
+    watchdog then runs a short *restricted* GP inside those masks.  SPOC
+    leads because its shortest-path restriction tracks the optimum far
+    closer than compute-at-source LCOF; LCOF is the backstop when the
+    shortest path itself is saturated.  Returns None when no baseline is
+    finite (the instance is unservable — e.g. a destination with no
+    in-links), letting the caller keep its incumbent instead.
+    """
+    for name in order:
+        allowed_e, allowed_c, phi0 = BASELINE_MASKS[name](inst)
+        cost = total_cost(inst, phi0)
+        if bool(jnp.isfinite(cost)):
+            return name, allowed_e, allowed_c, phi0, float(cost)
+    return None
+
+
 ALL_BASELINES = {"SPOC": spoc, "LCOF": lcof, "LPR-SC": lpr_sc}
 
 # Pure-mask constructors for the batched sweep drivers: each maps an

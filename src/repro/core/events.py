@@ -134,12 +134,18 @@ class EventEffect:
     ``dead_links`` — directed links this event removed; the solver marks
                      applications carrying strategy mass on them as touched
                      (the effect itself cannot, as it never sees phi).
+    ``shed``       — application slots this event forcibly departed because
+                     their traffic sources can no longer reach their
+                     destination (graceful degradation: an isolated
+                     destination sheds its chain instead of producing an
+                     unroutable — NaN-cost — problem).
     """
 
     topology: bool
     small: bool
     touched: np.ndarray
     dead_links: tuple = ()
+    shed: tuple = ()
 
 
 # ---------------------------------------------------------------------------
@@ -155,6 +161,57 @@ def _default_chain(K1: int, n_tasks: int):
     return L, w, mask
 
 
+def _check_index(v: int, n: int, what: str) -> None:
+    """Bounds-check an event index.  jnp's clamped indexing would otherwise
+    turn an out-of-range slot/node into a silent write to the LAST one."""
+    if not 0 <= v < n:
+        raise ValueError(f"{what} {v} out of range [0, {n})")
+
+
+def _reverse_reach(adj: np.ndarray, d: int) -> np.ndarray:
+    """(V,) bool: which nodes have a directed path to ``d`` (reverse BFS)."""
+    seen = np.zeros(adj.shape[0], dtype=bool)
+    seen[d] = True
+    stack = [int(d)]
+    while stack:
+        v = stack.pop()
+        for u in np.flatnonzero(adj[:, v] & ~seen):
+            seen[u] = True
+            stack.append(int(u))
+    return seen
+
+
+def _shed_unreachable(inst: Instance, touched: np.ndarray):
+    """Depart applications whose live sources lost every route to their dst.
+
+    Failures sampled by :func:`random_trace` preserve connectivity so this
+    never fires there; hand-written or chaos traces may isolate a
+    destination, and an unroutable chain has NO finite-cost strategy — the
+    graceful response is to shed the chain (a dead padded row), not to let
+    the solver diverge.  Returns (inst, touched, shed_slots).
+    """
+    adj = np.asarray(inst.adj)
+    r = np.asarray(inst.r)
+    live = np.asarray(inst.stage_mask).any(axis=1)
+    dst = np.asarray(inst.dst)
+    shed = []
+    for a in np.flatnonzero(live):
+        srcs = np.flatnonzero(r[a] > 0)
+        if len(srcs) and not _reverse_reach(adj, int(dst[a]))[srcs].all():
+            shed.append(int(a))
+    if not shed:
+        return inst, touched, ()
+    gone = np.zeros(inst.A, dtype=bool)
+    gone[shed] = True
+    inst = dataclasses.replace(
+        inst,
+        r=jnp.where(gone[:, None], 0.0, inst.r),
+        stage_mask=jnp.where(gone[:, None], False, inst.stage_mask),
+        n_tasks=jnp.where(gone, 0, inst.n_tasks),
+    )
+    return inst, touched & ~gone, tuple(shed)
+
+
 def apply_event(inst: Instance, ev: Event) -> tuple[Instance, EventEffect]:
     """Apply one event to a (padded) member instance.
 
@@ -168,6 +225,13 @@ def apply_event(inst: Instance, ev: Event) -> tuple[Instance, EventEffect]:
     touched = np.zeros(A, dtype=bool)
 
     if isinstance(ev, RateScale):
+        if not (np.isfinite(ev.factor) and ev.factor > 0):
+            raise ValueError(f"RateScale: factor {ev.factor} must be a "
+                             "finite positive number")
+        if ev.app is not None:
+            _check_index(ev.app, A, "RateScale: app")
+            if not bool(inst.stage_mask[ev.app].any()):
+                raise ValueError(f"RateScale: slot {ev.app} is dead")
         if ev.app is None:
             r = inst.r * ev.factor
             touched[:] = np.asarray(inst.stage_mask).any(axis=1)
@@ -180,6 +244,8 @@ def apply_event(inst: Instance, ev: Event) -> tuple[Instance, EventEffect]:
         return new, EventEffect(topology=False, small=small, touched=touched)
 
     if isinstance(ev, LinkDown):
+        _check_index(ev.i, inst.V, "LinkDown: node")
+        _check_index(ev.j, inst.V, "LinkDown: node")
         if not bool(inst.adj[ev.i, ev.j]):
             raise ValueError(f"LinkDown({ev.i},{ev.j}): link does not exist")
         new = dataclasses.replace(
@@ -187,13 +253,16 @@ def apply_event(inst: Instance, ev: Event) -> tuple[Instance, EventEffect]:
             adj=inst.adj.at[ev.i, ev.j].set(False),
             link_param=inst.link_param.at[ev.i, ev.j].set(0.0),
         )
+        new, touched, shed = _shed_unreachable(new, touched)
         return new, EventEffect(topology=True, small=False, touched=touched,
-                                dead_links=((ev.i, ev.j),))
+                                dead_links=((ev.i, ev.j),), shed=shed)
 
     if isinstance(ev, LinkUp):
+        _check_index(ev.i, inst.V, "LinkUp: node")
+        _check_index(ev.j, inst.V, "LinkUp: node")
         if bool(inst.adj[ev.i, ev.j]):
             raise ValueError(f"LinkUp({ev.i},{ev.j}): link already exists")
-        if ev.i == ev.j or ev.capacity <= 0:
+        if ev.i == ev.j or not np.isfinite(ev.capacity) or ev.capacity <= 0:
             raise ValueError(f"LinkUp({ev.i},{ev.j}): invalid link")
         new = dataclasses.replace(
             inst,
@@ -206,6 +275,7 @@ def apply_event(inst: Instance, ev: Event) -> tuple[Instance, EventEffect]:
 
     if isinstance(ev, NodeDown):
         v = ev.node
+        _check_index(v, inst.V, "NodeDown: node")
         adj_np = np.asarray(inst.adj)
         if not (adj_np[v].any() or adj_np[:, v].any()):
             raise ValueError(f"NodeDown({v}): node already dead")
@@ -222,18 +292,32 @@ def apply_event(inst: Instance, ev: Event) -> tuple[Instance, EventEffect]:
         touched &= ~gone
         new = dataclasses.replace(inst, adj=adj, link_param=link_param,
                                   r=r, stage_mask=stage_mask)
+        new, touched, shed = _shed_unreachable(new, touched)
         return new, EventEffect(topology=True, small=False, touched=touched,
-                                dead_links=dead)
+                                dead_links=dead, shed=shed)
 
     if isinstance(ev, AppArrival):
         a = ev.app
+        _check_index(a, A, "AppArrival: slot")
+        _check_index(ev.dst, inst.V, "AppArrival: dst")
         if bool(inst.stage_mask[a].any()):
             raise ValueError(f"AppArrival: slot {a} is live")
         if ev.n_tasks + 1 > inst.K1:
             raise ValueError(f"AppArrival: chain needs K1 >= {ev.n_tasks + 1}")
+        # Admission control: every source must have a route to the
+        # destination under the CURRENT topology, else the chain has no
+        # finite-cost strategy and would poison the whole member.
+        reach = _reverse_reach(np.asarray(inst.adj), ev.dst)
         L_row, w_row, mask_row = _default_chain(inst.K1, ev.n_tasks)
         r_row = np.zeros(inst.V)
         for node, rate in ev.rates:
+            _check_index(node, inst.V, "AppArrival: source")
+            if not (np.isfinite(rate) and rate >= 0):
+                raise ValueError(f"AppArrival: rate {rate} at node {node} "
+                                 "must be finite and non-negative")
+            if rate > 0 and not bool(reach[node]):
+                raise ValueError(f"AppArrival: source {node} cannot reach "
+                                 f"dst {ev.dst} — admission rejected")
             r_row[node] = rate
         new = dataclasses.replace(
             inst,
@@ -249,6 +333,7 @@ def apply_event(inst: Instance, ev: Event) -> tuple[Instance, EventEffect]:
 
     if isinstance(ev, AppDeparture):
         a = ev.app
+        _check_index(a, A, "AppDeparture: slot")
         if not bool(inst.stage_mask[a].any()):
             raise ValueError(f"AppDeparture: slot {a} already dead")
         new = dataclasses.replace(
@@ -303,15 +388,7 @@ def _reaches_all_dsts(adj: np.ndarray, dsts: Sequence[int]) -> bool:
     ``dsts`` (reverse BFS from each destination)."""
     live = adj.any(axis=1)
     for d in dsts:
-        seen = np.zeros(adj.shape[0], dtype=bool)
-        seen[d] = True
-        stack = [int(d)]
-        while stack:
-            v = stack.pop()
-            for u in np.flatnonzero(adj[:, v] & ~seen):
-                seen[u] = True
-                stack.append(int(u))
-        if not bool(seen[live].all()):
+        if not bool(_reverse_reach(adj, int(d))[live].all()):
             return False
     return True
 

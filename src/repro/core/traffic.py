@@ -336,3 +336,60 @@ def feasibility_violation(inst: Instance, phi: Phi) -> jnp.ndarray:
     degen = inst.degenerate_mask()
     want = jnp.where(degen, 0.0, 1.0)
     return jnp.max(jnp.abs(tot - want))
+
+
+class StrategyViolations(NamedTuple):
+    """Per-invariant maxima of a live strategy (the §17 guardrail checks).
+
+    Every field is a scalar; an exactly-feasible strategy reports 0 (or
+    ``False``) everywhere.  ``nonfinite`` is the hard-corruption flag: any
+    nan/inf entry in phi poisons every downstream flow measurement, so it
+    is reported separately from the magnitude checks (whose comparisons a
+    nan would silently pass).
+    """
+
+    simplex: jnp.ndarray         # max |row sum - expected| over (a,k,i)
+    dead_link_mass: jnp.ndarray  # max phi.e mass on (i,j) not in E
+    dead_app_mass: jnp.ndarray   # max mass on rows of dead/padded apps
+    cpu_mass: jnp.ndarray        # max phi.c where offloading is disallowed
+    nonfinite: jnp.ndarray       # bool: any non-finite entry in phi
+
+
+def strategy_violations(inst: Instance, phi: Phi) -> StrategyViolations:
+    """Measure every runtime strategy invariant in one jittable call.
+
+    The numeric core of ``serve.online.OnlineSolver.verify_fleet``
+    (DESIGN.md §17): simplex rows (constraint (1)), zero mass on dead
+    links, zero mass on dead/padded application rows, zero CPU mass where
+    offloading is disallowed, and finiteness of every entry.  Pure and
+    vmappable, so fleet-wide checks batch into one device program.
+    """
+    live_app = inst.stage_mask.any(axis=1)                   # (A,)
+    dead_e = jnp.where(inst.adj[None, None], 0.0, jnp.abs(phi.e))
+    dead_rows = jnp.where(live_app[:, None, None], 0.0,
+                          jnp.abs(phi.e).sum(-1) + jnp.abs(phi.c))
+    bad_c = jnp.where(inst.cpu_allowed()[:, :, None], 0.0, jnp.abs(phi.c))
+    finite = jnp.all(jnp.isfinite(phi.e)) & jnp.all(jnp.isfinite(phi.c))
+    return StrategyViolations(
+        simplex=feasibility_violation(inst, phi),
+        dead_link_mass=jnp.max(dead_e),
+        dead_app_mass=jnp.max(dead_rows),
+        cpu_mass=jnp.max(bad_c),
+        nonfinite=~finite,
+    )
+
+
+def capacity_slack(inst: Instance, F: jnp.ndarray) -> jnp.ndarray:
+    """Min over links of ``theta * capacity - F`` (the M/M/1 headroom).
+
+    Negative slack means some link operates beyond the modelled queueing
+    region (``costs.saturated``) — the strategy is still *feasible* (the
+    quadratic cost extension keeps costs finite) but the served delay no
+    longer tracks the M/M/1 model, which is the "capacity slack" guardrail
+    of DESIGN.md §17.  LINEAR links have no capacity; instances whose link
+    family is LINEAR report ``+inf``.
+    """
+    if inst.link_kind == costs.LINEAR:
+        return jnp.asarray(jnp.inf, dtype=F.dtype)
+    slack = jnp.where(inst.adj, costs._THETA * inst.link_param - F, jnp.inf)
+    return jnp.min(slack)

@@ -9,10 +9,11 @@ from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover - static analysis only
     from repro.serve.engine import ServeEngine, make_serve_step  # noqa: F401
-    from repro.serve.online import EventReport, OnlineSolver  # noqa: F401
+    from repro.serve.online import (EventReport, FleetHealth,  # noqa: F401
+                                    HealthReport, OnlineSolver)
 
 _ENGINE = ("ServeEngine", "make_serve_step", "make_prefill_step", "Request")
-_ONLINE = ("OnlineSolver", "EventReport")
+_ONLINE = ("OnlineSolver", "EventReport", "HealthReport", "FleetHealth")
 
 __all__ = list(_ENGINE + _ONLINE)
 

@@ -1,4 +1,4 @@
-"""OnlineSolver: the GP solver as a long-running service (DESIGN.md §16).
+"""OnlineSolver: the GP solver as a long-running service (DESIGN.md §16/§17).
 
 The paper's Section IV closes by noting the distributed algorithm "adapts
 to changes in input rates and network topology, and can be implemented as
@@ -38,6 +38,37 @@ Architecture — everything rides the existing batched machinery:
     mix under the NEW instance, so descent is preserved and the window
     still cuts iterations.  Topology/app churn clears the window.
 
+Fault tolerance (DESIGN.md §17) — the service guarantees it never serves a
+strategy worse than its last known good one:
+
+  * **Last-known-good checkpoints** — every member keeps an incumbent
+    (phi, cost, residual).  The incumbent is repaired alongside the live
+    strategy on topology events and *re-costed under the current instance
+    on every event*, so "served cost <= incumbent cost" is an invariant
+    the service can always check — and enforce by rolling back.
+  * **Escalation ladder** — when a re-convergence ends non-finite, worse
+    than the incumbent, or exhausts its full iteration budget without the
+    residual certificate, the watchdog climbs: warm retry (Anderson window
+    kept) → window-cleared warm retry → cold restart → SPOC/LCOF
+    baseline-mask fallback (``baselines.fallback_strategy`` — always
+    feasible, admission-safe), each rung on a backoff budget.  The best
+    finite candidate is served iff it beats the incumbent; otherwise the
+    incumbent is served (rollback).  ``HealthReport.status`` records the
+    outcome: ``converged`` / ``capped`` / ``degraded`` / ``rolled_back`` /
+    ``rejected``.
+  * **Runtime invariants** — ``verify_fleet`` measures simplex rows, stray
+    mass on dead links/apps/CPUs, cost finiteness and capacity slack per
+    member (``traffic.strategy_violations`` + ``traffic.capacity_slack``).
+    With ``debug=True`` it runs after every event and a *corrupt* member
+    (invariant violation, not mere saturation) is quarantined onto the
+    baseline-mask strategy instead of poisoning the batched carry.
+  * **Fault injection** — ``fault_injector=faults.FaultInjector(...)``
+    corrupts the member's carry at the solve boundary before each event
+    (non-finite entries, de-normalized rows), exercising exactly these
+    recovery paths; ``benchmarks/online_bench.py --chaos`` drives a
+    100-event ``faults.chaos_trace`` through them and records ladder hit
+    counts as a BENCH_gp.json chaos row.
+
 Example::
 
     >>> insts = [network.table_ii_instance("abilene", rate_scale=s)
@@ -55,15 +86,23 @@ as BENCH_gp.json online rows; ``tests/test_online.py`` pins the semantics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import batch, conditions, engine, events, gp, traffic
+from repro.core import (baselines, batch, conditions, engine, events, gp,
+                        traffic)
 from repro.core.network import Instance
 from repro.core.traffic import Phi
+
+# Corrupt-class invariant thresholds (DESIGN.md §17): the GP projection and
+# repair_phi keep simplex rows normalized to float32 roundoff (~1e-6) and
+# place exactly zero mass on dead directions, so anything past these is
+# state corruption, not numerical drift.
+FEAS_TOL = 1e-3
+MASS_TOL = 1e-4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,7 +114,10 @@ class EventReport:
     ``skipped_apps`` split the member's live applications into gate-opened
     and gate-frozen; ``unfroze`` counts apps the post-convergence re-check
     promoted from frozen to solved (congestion drift); ``repaired`` /
-    ``kept_window`` record the phi-repair and Anderson-carry decisions.
+    ``kept_window`` record the phi-repair and Anderson-carry decisions;
+    ``converged`` is the solver's convergence certificate (residual within
+    tol, or the §15 phi fixed-point latch) — False means the served
+    strategy is best-effort (budget cap / stall), not provably stationary.
     """
 
     event: events.Event
@@ -89,6 +131,67 @@ class EventReport:
     repaired: bool
     kept_window: bool
     cold_restart: bool = False
+    converged: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthReport(EventReport):
+    """EventReport plus the §17 guardrail verdict.
+
+    ``status`` is the service-level outcome:
+
+      * ``converged``   — GP result served, residual certificate holds
+      * ``capped``      — GP result served best-effort (budget exhausted /
+                          stalled above ``gate_tol``) but finite and no
+                          worse than the incumbent
+      * ``degraded``    — a baseline-mask (SPOC/LCOF) strategy is being
+                          served (ladder floor or quarantine)
+      * ``rolled_back`` — the last-known-good incumbent is being served
+                          because every fresh candidate was worse
+      * ``rejected``    — nothing finite exists, not even the incumbent;
+                          the incumbent strategy is parked best-effort
+
+    ``rungs`` lists the escalation-ladder rungs climbed (empty on the
+    healthy path); ``incumbent_cost`` is the last-known-good cost re-costed
+    under the post-event instance — the bound served costs are held to.
+    """
+
+    status: str = "converged"
+    rungs: tuple = ()
+    incumbent_cost: float = float("nan")
+    rolled_back: bool = False
+    quarantined: bool = False
+    injected: Optional[str] = None
+    shed: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetHealth:
+    """One member's runtime invariant measurements (``verify_fleet``)."""
+
+    member: int
+    simplex: float          # max |strategy row sum - expected|
+    dead_link_mass: float   # max phi.e mass on absent links
+    dead_app_mass: float    # max mass on dead/padded app rows
+    cpu_mass: float         # max phi.c where offloading is disallowed
+    nonfinite: bool         # any non-finite phi entry
+    cost: float             # the cost being served
+    capacity_slack: float   # min over links of theta*cap - F (inf: LINEAR)
+
+    @property
+    def corrupt(self) -> bool:
+        """Invariant violation (state corruption) — quarantine-worthy."""
+        return bool(self.nonfinite or not np.isfinite(self.cost)
+                    or self.simplex > FEAS_TOL
+                    or self.dead_link_mass > MASS_TOL
+                    or self.dead_app_mass > MASS_TOL
+                    or self.cpu_mass > MASS_TOL)
+
+    @property
+    def saturated(self) -> bool:
+        """Load past the modelled M/M/1 region — reported, NOT corrupt
+        (the quadratic cost extension keeps it finite and recoverable)."""
+        return bool(self.capacity_slack < 0)
 
 
 class OnlineSolver:
@@ -101,6 +204,13 @@ class OnlineSolver:
     the skip gate — apps below it are provably within tolerance of
     stationary and are frozen; ``carry_window=False`` disables the §15
     Anderson-window carry across small rate deltas (ablation hook).
+
+    Fault-tolerance knobs (§17): ``rollback_margin`` is the relative slack
+    a served cost may exceed the incumbent by before the watchdog
+    escalates; ``debug=True`` runs ``verify_fleet`` after every event and
+    quarantines corrupt members; ``fault_injector`` (a
+    ``faults.FaultInjector``) corrupts the member's carry before each
+    event, for chaos testing.
 
     Construction cold-solves the whole fleet in one batched program;
     per-member cold iteration counts are kept in ``cold_iters`` as the
@@ -123,6 +233,9 @@ class OnlineSolver:
         carry_window: bool = True,
         max_unfreeze_rounds: int = 4,
         plateau_res: Optional[float] = None,
+        rollback_margin: float = 1e-4,
+        debug: bool = False,
+        fault_injector=None,
     ):
         self._members = events.pad_fleet(insts, spare_apps=spare_apps)
         self.binst: Instance = jax.tree_util.tree_map(
@@ -131,6 +244,7 @@ class OnlineSolver:
         self.tol = float(tol)
         self.gate_tol = float(tol if gate_tol is None else gate_tol)
         self.max_iters = int(max_iters)
+        self.patience = int(patience)
         self.solver = solver
         self.blocked = blocked
         self.carry_window = bool(carry_window)
@@ -144,12 +258,24 @@ class OnlineSolver:
         # strictly faster AND lands on the same optimum as the cold
         # baseline, preserving cost parity.
         self.plateau_res = float(20 * tol if plateau_res is None else plateau_res)
+        self.rollback_margin = float(rollback_margin)
+        self.debug = bool(debug)
+        self.fault_injector = fault_injector
         self._accel = engine.resolve_accel(accel)
         self._alpha = jnp.float32(alpha)
         self._tol = jnp.float32(tol)
         self._patience = jnp.int32(patience)
         self._max_iters = jnp.int32(max_iters)
         self._residual_fn = jax.jit(conditions.per_app_residual)
+        # per-event guardrail measurements run OUTSIDE the scan programs;
+        # eager dispatch of the whole flow computation costs more than the
+        # event's solve on small instances, so both are jitted once here
+        self._cost_fn = jax.jit(
+            lambda i, p: traffic.total_cost(i, p, solver=solver))
+        self._health_fn = jax.jit(
+            lambda i, p: (traffic.strategy_violations(i, p),
+                          traffic.capacity_slack(
+                              i, traffic.flows(i, p, solver=solver).F)))
 
         phi0 = jax.vmap(gp.init_phi)(self.binst)
         self.carry: engine.ScanCarry = jax.vmap(
@@ -158,8 +284,16 @@ class OnlineSolver:
 
         self.total_iters = 0                       # all committed iterations
         self.reports: list[EventReport] = []
+        self.ladder_hits: dict[str, int] = {}      # escalation-rung counters
+        self.quarantines = 0
         self.cold_iters, _ = self._converge(list(range(self.B)))
         self.event_iters = 0                       # iterations after cold start
+        # Last-known-good checkpoints: the cold solve is the first LKG.
+        self._lkg_phi: list[Phi] = [self.phi(b) for b in range(self.B)]
+        self._lkg_cost: list[float] = [float(c) for c in self.costs()]
+        self._lkg_residual: list[float] = [float(r) for r in self.residuals()]
+        self._lkg_cert: list[bool] = [self._certificate(b)
+                                      for b in range(self.B)]
 
     # -- fleet state accessors ------------------------------------------
 
@@ -183,15 +317,62 @@ class OnlineSolver:
             out[b] = res.max(initial=0.0)
         return out
 
+    def incumbent(self, b: int) -> tuple[Phi, float]:
+        """Member ``b``'s last-known-good (phi, cost) checkpoint."""
+        return self._lkg_phi[b], self._lkg_cost[b]
+
+    # -- runtime invariants (§17) ---------------------------------------
+
+    def verify_member(self, b: int) -> FleetHealth:
+        """Measure member ``b``'s strategy against the §17 invariants."""
+        inst_b = self._members[b]
+        phi_b = self.phi(b)
+        sv, slack = self._health_fn(inst_b, phi_b)
+        if bool(sv.nonfinite):
+            slack = float("nan")       # flows of a NaN strategy are noise
+        else:
+            slack = float(slack)
+        return FleetHealth(
+            member=b,
+            simplex=float(sv.simplex),
+            dead_link_mass=float(sv.dead_link_mass),
+            dead_app_mass=float(sv.dead_app_mass),
+            cpu_mass=float(sv.cpu_mass),
+            nonfinite=bool(sv.nonfinite),
+            cost=float(self.carry.cost[b]),
+            capacity_slack=slack,
+        )
+
+    def verify_fleet(self, members: Optional[Sequence[int]] = None
+                     ) -> list[FleetHealth]:
+        """Run the runtime invariant checker over the fleet (public API).
+
+        Checks simplex rows, stray mass on dead links/apps/CPUs,
+        finiteness and capacity slack for every member (or the given
+        subset).  Pure measurement — quarantining is the caller's (or
+        ``debug`` mode's) decision via :attr:`FleetHealth.corrupt`.
+        """
+        return [self.verify_member(b)
+                for b in (range(self.B) if members is None else members)]
+
     # -- event ingestion ------------------------------------------------
 
-    def process(self, ev: events.Event) -> EventReport:
+    def process(self, ev: events.Event) -> HealthReport:
         """Ingest one event and re-converge its member incrementally."""
         b = ev.member
+        injected = None
+        if self.fault_injector is not None:
+            carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
+            carry_b, injected = self.fault_injector.maybe_corrupt(
+                carry_b, b, len(self.reports))
+            if injected is not None:
+                self._scatter_carry(b, carry_b)
+
         inst_b, eff = events.apply_event(self._members[b], ev)
         self._members[b] = inst_b
         self.binst = jax.tree_util.tree_map(
             lambda full, x: full.at[b].set(x), self.binst, inst_b)
+        seed_phi = gp.init_phi(inst_b)
 
         phi_b = self.phi(b)
         touched = np.array(eff.touched, dtype=bool)
@@ -202,8 +383,18 @@ class OnlineSolver:
             for i, j in eff.dead_links:
                 touched |= np.asarray(
                     phi_b.e[:, :, i, j].sum(axis=1)) > 1e-6
-            phi_b = traffic.repair_phi(inst_b, phi_b, gp.init_phi(inst_b))
+            phi_b = traffic.repair_phi(inst_b, phi_b, seed_phi)
             repaired = True
+
+        # Last-known-good maintenance: repair the incumbent alongside the
+        # live strategy and re-cost it under the post-event instance, so
+        # the rollback bound is always measured on the CURRENT problem.
+        lkg_phi = self._lkg_phi[b]
+        if eff.topology:
+            lkg_phi = traffic.repair_phi(inst_b, lkg_phi, seed_phi)
+            self._lkg_phi[b] = lkg_phi
+        incumbent = float(self._cost_fn(inst_b, lkg_phi))
+        self._lkg_cost[b] = incumbent
 
         live = np.asarray(inst_b.stage_mask).any(axis=1)
         res = np.asarray(self._residual_fn(inst_b, phi_b))
@@ -215,8 +406,13 @@ class OnlineSolver:
         carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
         carry_b = engine.reset_carry(inst_b, phi_b, carry_b,
                                      keep_window=keep, solver=self.solver)
-        if not np.isfinite(float(carry_b.cost)):
+        cost_now = float(carry_b.cost)
+        if not np.isfinite(cost_now):
             active = live.copy()       # over-capacity strategy: solve everyone
+        elif np.isfinite(incumbent) and cost_now > incumbent * (
+                1 + self.rollback_margin):
+            # serving as-is would break the LKG guarantee — open the gate
+            active = live.copy()
         if not active.any():
             # every live app is provably stationary at the new instance:
             # commit bookkeeping (cost under the new rates) and skip the solve
@@ -224,14 +420,11 @@ class OnlineSolver:
                 done=jnp.asarray(True),
                 residual=jnp.float32(res.max(initial=0.0)))
             self._scatter_carry(b, carry_b)
-            rep = EventReport(
-                event=ev, member=b, iterations=0,
-                cost=float(carry_b.cost),
-                residual=float(res.max(initial=0.0)),
-                solved_apps=0, skipped_apps=int(live.sum()),
-                unfroze=0, repaired=repaired, kept_window=keep)
-            self.reports.append(rep)
-            return rep
+            return self._finish(
+                ev, b, inst_b, incumbent, iters=0, solved=0,
+                skipped=int(live.sum()), unfroze=0, repaired=repaired,
+                keep=keep, cold_restart=False, rungs=(), served="gp",
+                converged=True, injected=injected, shed=eff.shed)
 
         self._scatter_carry(b, carry_b)
         am = active
@@ -274,10 +467,7 @@ class OnlineSolver:
                 plateaued = True
         if plateaued:
             cold_restart = True
-            carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
-            carry_b = engine.reset_carry(inst_b, gp.init_phi(inst_b), carry_b,
-                                         keep_window=False, solver=self.solver)
-            self._scatter_carry(b, carry_b)
+            self._reset_member(b, seed_phi, keep_window=False)
             am = live.copy()          # a cold start moves every live app
             it, _ = self._converge([b], app_mask=am[None, :])
             iters_total += int(it[0])
@@ -290,29 +480,229 @@ class OnlineSolver:
             # congestion moved under gate-frozen apps: unfreeze and go again
             unfroze += int(drifted.sum())
             am = am | drifted
-            carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
-            carry_b = engine.reset_carry(inst_b, carry_b.phi, carry_b,
-                                         keep_window=True, solver=self.solver)
-            self._scatter_carry(b, carry_b)
+            self._reset_member(b, self.phi(b), keep_window=True)
             it, _ = self._converge([b], app_mask=am[None, :])
             iters_total += int(it[0])
             res = np.asarray(self._residual_fn(inst_b, self.phi(b)))
 
-        self.event_iters += iters_total
-        rep = EventReport(
-            event=ev, member=b, iterations=iters_total,
-            cost=float(self.carry.cost[b]),
-            residual=float(res.max(initial=0.0)),
-            solved_apps=int(am.sum()),
-            skipped_apps=int((live & ~am).sum()),
-            unfroze=unfroze, repaired=repaired, kept_window=keep,
-            cold_restart=cold_restart)
-        self.reports.append(rep)
-        return rep
+        # -- watchdog (§17): escalate on non-finite / worse-than-incumbent
+        # -- / true budget exhaustion
+        served = "gp"
+        rungs: tuple = ()
+        served_cost = float(self.carry.cost[b])
+        converged = self._certificate(b)
+        if self._needs_escalation(b, served_cost, incumbent):
+            extra, rungs, served, converged = self._escalate(
+                b, inst_b, seed_phi, live, incumbent,
+                already_cold=cold_restart)
+            iters_total += extra
 
-    def step(self, evs: Sequence[events.Event]) -> list[EventReport]:
+        self.event_iters += iters_total
+        return self._finish(
+            ev, b, inst_b, incumbent, iters=iters_total,
+            solved=int(am.sum()), skipped=int((live & ~am).sum()),
+            unfroze=unfroze, repaired=repaired, keep=keep,
+            cold_restart=cold_restart, rungs=rungs, served=served,
+            converged=converged, injected=injected, shed=eff.shed)
+
+    def step(self, evs: Sequence[events.Event]) -> list[HealthReport]:
         """Ingest a list of events in order (the trace-replay entry point)."""
         return [self.process(ev) for ev in evs]
+
+    # -- guardrails (§17) -----------------------------------------------
+
+    def _certificate(self, b: int) -> bool:
+        """True iff member ``b``'s last solve stopped *with* a convergence
+        certificate.  The engine's done latch fires for four reasons
+        (engine.py): committed residual <= tol, the §15 phi fixed-point
+        freeze, stall patience, or budget exhaustion.  The first two are
+        certificates (the scan's committed residual is an approximation
+        from pre-step marginals, so a fixed-point latch can legitimately
+        carry a residual a hair above tol); stall and budget caps are
+        best-effort stops."""
+        if not bool(self.carry.done[b]):
+            return False
+        res = float(self.carry.residual[b])
+        if np.isfinite(res) and res <= self.tol:
+            return True
+        return (int(self.carry.stall[b]) < self.patience
+                and int(self.carry.iters[b]) < self.max_iters)
+
+    def _needs_escalation(self, b: int, cost: float,
+                          incumbent: float) -> bool:
+        if not np.isfinite(cost):
+            return True
+        if np.isfinite(incumbent) and cost > incumbent * (
+                1 + self.rollback_margin):
+            return True
+        # true budget exhaustion: the last re-convergence burned the whole
+        # budget AND left no certificate.  A stall-latched stop below
+        # max_iters is a plateau, not exhaustion — it does not escalate
+        # (the §16 plateau probe already handled it).
+        capped = int(self.carry.iters[b]) >= self.max_iters
+        return capped and not self._certificate(b)
+
+    def _escalate(self, b: int, inst_b: Instance, seed_phi: Phi,
+                  live: np.ndarray, incumbent: float, *,
+                  already_cold: bool) -> tuple[int, tuple, str, bool]:
+        """Climb the degradation ladder; returns (iterations, rungs, served).
+
+        Rungs, each on a backoff budget: ``warm`` (continue from the live
+        strategy, Anderson window kept), ``warm-clear`` (window zeroed — a
+        misled mixer gets a different trajectory), ``cold`` (gp.init_phi,
+        full budget; skipped when the event path already restarted cold),
+        ``baseline:<SPOC|LCOF>`` (mask-restricted solve from
+        ``baselines.fallback_strategy`` — always feasible).  The best
+        finite candidate wins iff it beats the incumbent, else the
+        incumbent is rolled back in; returns (iterations, rungs, served,
+        converged) where ``served`` is one of
+        "gp" / "baseline" / "incumbent" / "none".
+        """
+        extra = 0
+        rungs: list[str] = []
+        am = live[None, :]
+        margin = 1 + self.rollback_margin
+
+        def measure(tag: str, is_baseline: bool = False) -> dict:
+            # ``cert``/``cert_ok`` travel with the candidate: the committed
+            # scan residual and whether the stop carried a convergence
+            # certificate (residual latch or phi fixed-point freeze), so
+            # serving a candidate re-installs its own verdict.
+            return dict(rung=tag, phi=self.phi(b),
+                        cost=float(self.carry.cost[b]),
+                        cert=float(self.carry.residual[b]),
+                        cert_ok=self._certificate(b),
+                        baseline=is_baseline)
+
+        def run(rung: str, phi0: Phi, keep_w: bool, budget: int,
+                allowed=None, is_baseline: bool = False) -> dict:
+            nonlocal extra
+            self.ladder_hits[rung] = self.ladder_hits.get(rung, 0) + 1
+            rungs.append(rung)
+            self._reset_member(b, phi0, keep_window=keep_w)
+            it, _ = self._converge([b], app_mask=am, max_iters=budget,
+                                   allowed=allowed)
+            extra += int(it[0])
+            c = measure(rung, is_baseline)
+            cands.append(c)
+            return c
+
+        def acceptable(c: dict) -> bool:
+            return (np.isfinite(c["cost"]) and c["cert_ok"]
+                    and (not np.isfinite(incumbent)
+                         or c["cost"] <= incumbent * margin))
+
+        cands = [measure("event")]
+        half = max(1, self.max_iters // 2)
+        done = False
+        if np.isfinite(cands[0]["cost"]):
+            # warm rungs only make sense from a finite live strategy; a
+            # NaN-poisoned phi jumps straight to the cold rung
+            done = acceptable(run("warm", self.phi(b), True, half))
+            if not done:
+                done = acceptable(run("warm-clear", self.phi(b), False, half))
+        if not done and not already_cold:
+            done = acceptable(run("cold", seed_phi, False, self.max_iters))
+        if not done:
+            fb = baselines.fallback_strategy(inst_b)
+            if fb is not None:
+                name, allowed_e, allowed_c, phi0, _ = fb
+                run(f"baseline:{name}", phi0, False,
+                    max(1, self.max_iters // 4),
+                    allowed=(allowed_e, allowed_c), is_baseline=True)
+
+        served, converged = self._serve_best(b, inst_b, cands, incumbent)
+        return extra, tuple(rungs), served, converged
+
+    def _serve_best(self, b: int, inst_b: Instance, cands: list[dict],
+                    incumbent: float) -> tuple[str, bool]:
+        """Commit the winning candidate (or the incumbent) to the carry;
+        returns (served, converged)."""
+        margin = 1 + self.rollback_margin
+        finite = [c for c in cands if np.isfinite(c["cost"])]
+        best = min(finite, key=lambda c: c["cost"]) if finite else None
+        if best is not None and (not np.isfinite(incumbent)
+                                 or best["cost"] <= incumbent * margin):
+            self._commit_phi(b, inst_b, best["phi"], best["cert"])
+            return ("baseline" if best.get("baseline") else "gp",
+                    bool(best["cert_ok"]))
+        if np.isfinite(incumbent):
+            self._commit_phi(b, inst_b, self._lkg_phi[b],
+                             self._lkg_residual[b])
+            return "incumbent", self._lkg_cert[b]
+        if best is not None:
+            # incumbent is not even finite: serve the best-effort candidate
+            self._commit_phi(b, inst_b, best["phi"], best["cert"])
+            return ("baseline" if best.get("baseline") else "gp",
+                    bool(best["cert_ok"]))
+        # nothing finite anywhere — park on the (repaired) incumbent
+        lkg = self._lkg_phi[b]
+        self._commit_phi(b, inst_b, lkg, float("inf"))
+        return "none", False
+
+    def _quarantine(self, b: int, inst_b: Instance) -> int:
+        """Replace a corrupt member's strategy with the baseline-mask
+        fallback (short restricted solve); returns iterations spent."""
+        fb = baselines.fallback_strategy(inst_b)
+        if fb is None:
+            # unservable instance — park on the repaired incumbent
+            self._commit_phi(b, inst_b, self._lkg_phi[b], float("inf"))
+            return 0
+        name, allowed_e, allowed_c, phi0, _ = fb
+        self.ladder_hits[f"quarantine:{name}"] = \
+            self.ladder_hits.get(f"quarantine:{name}", 0) + 1
+        live = np.asarray(inst_b.stage_mask).any(axis=1)
+        self._reset_member(b, phi0, keep_window=False)
+        it, _ = self._converge([b], app_mask=live[None, :],
+                               max_iters=max(1, self.max_iters // 4),
+                               allowed=(allowed_e, allowed_c))
+        return int(it[0])
+
+    def _finish(self, ev, b: int, inst_b: Instance, incumbent: float, *,
+                iters: int, solved: int, skipped: int, unfroze: int,
+                repaired: bool, keep: bool, cold_restart: bool,
+                rungs: tuple, served: str, converged: bool,
+                injected: Optional[str], shed: tuple) -> HealthReport:
+        """Verdict + LKG update + (debug) invariant check, one report."""
+        quarantined = False
+        if self.debug and served != "none":
+            health = self.verify_member(b)
+            if health.corrupt:
+                quarantined = True
+                self.quarantines += 1
+                iters += self._quarantine(b, inst_b)
+                served = "baseline"
+                converged = self._certificate(b)
+
+        served_cost = float(self.carry.cost[b])
+        res_max = float(np.asarray(
+            self._residual_fn(inst_b, self.phi(b))).max(initial=0.0))
+        converged = bool(converged and np.isfinite(served_cost))
+        status = ("rolled_back" if served == "incumbent" else
+                  "rejected" if served == "none" else
+                  "degraded" if served == "baseline" else
+                  "converged" if converged else "capped")
+
+        # LKG advances on any finite serve that honours the incumbent
+        # bound; a rollback re-affirms the incumbent (no-op by value).
+        if np.isfinite(served_cost) and (
+                not np.isfinite(incumbent)
+                or served_cost <= incumbent * (1 + self.rollback_margin)):
+            self._lkg_phi[b] = self.phi(b)
+            self._lkg_cost[b] = served_cost
+            self._lkg_residual[b] = res_max
+            self._lkg_cert[b] = converged
+
+        rep = HealthReport(
+            event=ev, member=b, iterations=iters, cost=served_cost,
+            residual=res_max, solved_apps=solved, skipped_apps=skipped,
+            unfroze=unfroze, repaired=repaired, kept_window=keep,
+            cold_restart=cold_restart, converged=converged, status=status,
+            rungs=tuple(rungs), incumbent_cost=incumbent,
+            rolled_back=(served == "incumbent"), quarantined=quarantined,
+            injected=injected, shed=tuple(shed))
+        self.reports.append(rep)
+        return rep
 
     # -- internals ------------------------------------------------------
 
@@ -320,9 +710,69 @@ class OnlineSolver:
         self.carry = jax.tree_util.tree_map(
             lambda full, part: full.at[b].set(part), self.carry, carry_b)
 
+    def _reset_member(self, b: int, phi: Phi, *, keep_window: bool) -> None:
+        carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
+        carry_b = engine.reset_carry(self._members[b], phi, carry_b,
+                                     keep_window=keep_window,
+                                     solver=self.solver)
+        self._scatter_carry(b, carry_b)
+
+    def _commit_phi(self, b: int, inst_b: Instance, phi: Phi,
+                    res_max: float) -> None:
+        """Install ``phi`` as member ``b``'s served strategy (done-latched)."""
+        carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
+        carry_b = engine.reset_carry(inst_b, phi, carry_b,
+                                     keep_window=False, solver=self.solver)
+        # stall=patience marks the commit as certificate-free: the phi was
+        # installed, not converged to, so _certificate must only accept it
+        # when the recorded residual itself is within tol
+        carry_b = carry_b._replace(done=jnp.asarray(True),
+                                   residual=jnp.float32(res_max),
+                                   stall=jnp.int32(self.patience))
+        self._scatter_carry(b, carry_b)
+
+    def _chunk_schedule(self, advance: Callable[[int], tuple[bool, float]],
+                        *, plateau_res: Optional[float] = None,
+                        max_iters: Optional[int] = None) -> bool:
+        """The shared pow2 chunk ladder of every re-convergence.
+
+        ``advance(length)`` runs one compiled chunk and returns
+        ``(all_done, probe_residual)`` where the probe is the smallest
+        residual among still-running lanes (inf when meaningless).  The
+        schedule doubles chunk lengths from ``gp._CHUNK_MIN`` to
+        ``gp._CHUNK_MAX`` exactly like ``gp.solve_batched``; ``max_iters``
+        overrides the instance budget (the §17 ladder's per-rung backoff).
+
+        With ``plateau_res`` set, the first chunk arms a *suspect* latch
+        when a running lane's residual is already below it (a spurious
+        near-fixed point of the GP map); one grace chunk later, if the
+        done latch still hasn't fired, the run is declared plateaued and
+        the caller restarts cold.  Returns that plateau flag.
+        """
+        budget = self.max_iters if max_iters is None else int(max_iters)
+        steps, chunk = 0, gp._CHUNK_MIN
+        suspect = False
+        while steps < budget:
+            length = min(chunk, gp._prev_pow2(budget - steps))
+            chunk = min(chunk * 2, gp._CHUNK_MAX)
+            done, probe = advance(length)
+            steps += length
+            if done:
+                break
+            if suspect:
+                # grace chunk expired without the done latch: this is a
+                # crawl, not a fixed point about to latch
+                return True
+            if plateau_res is not None:
+                suspect = probe <= plateau_res
+                plateau_res = None     # probe only the first chunk
+        return False
+
     def _converge(self, members: Sequence[int],
                   app_mask: Optional[np.ndarray] = None,
                   plateau_res: Optional[float] = None,
+                  max_iters: Optional[int] = None,
+                  allowed=None,
                   ) -> tuple[np.ndarray, bool]:
         """Run the affected members to convergence through the batched
         chunk programs; returns (per-member committed iteration counts,
@@ -331,14 +781,8 @@ class OnlineSolver:
         Members are gathered into a power-of-two bucket (pad lanes
         duplicate member 0 but start ``done``), so event-time solves hit
         the same XLA cache entries regardless of how many members an event
-        touched; the chunk schedule mirrors ``gp.solve_batched``.
-
-        With ``plateau_res`` set, the run is probed once after the first
-        chunk: if any member is still running but its (gate-masked)
-        residual is already below ``plateau_res``, the warm start sits on a
-        spurious near-fixed point of the GP map — further iterations crawl
-        on micro-improvements — and the call returns early with the flag
-        set so the caller can restart cold.
+        touched; chunk scheduling and the plateau probe live in
+        ``_chunk_schedule``, shared with the single-member path.
 
         A single member (every event — events touch exactly one member)
         runs through the *unbatched* ``gp._scan_chunk`` program — the same
@@ -348,7 +792,9 @@ class OnlineSolver:
         batched fusion).  The batched path serves the initial fleet solve.
         """
         if len(members) == 1:
-            return self._converge_one(members[0], app_mask, plateau_res)
+            return self._converge_one(members[0], app_mask, plateau_res,
+                                      max_iters=max_iters, allowed=allowed)
+        assert allowed is None, "direction masks are single-member only"
         n = len(members)
         bucket = batch.next_pow2(n)
         sel = jnp.asarray(list(members) + [members[0]] * (bucket - n))
@@ -363,27 +809,25 @@ class OnlineSolver:
             am = jnp.asarray(np.concatenate(
                 [am_np, np.repeat(am_np[:1], bucket - n, axis=0)], axis=0))
 
-        steps, chunk = 0, gp._CHUNK_MIN
-        plateaued = False
-        while steps < self.max_iters:
-            length = min(chunk, gp._prev_pow2(self.max_iters - steps))
-            chunk = min(chunk * 2, gp._CHUNK_MAX)
-            carry_s, _ = gp._scan_chunk_batched(
-                inst_s, carry_s, self._alpha, self._tol, self._patience,
-                self._max_iters, None, None, length=length,
+        state = {"carry": carry_s}
+
+        def advance(length: int) -> tuple[bool, float]:
+            state["carry"], _ = gp._scan_chunk_batched(
+                inst_s, state["carry"], self._alpha, self._tol,
+                self._patience, self._max_iters, None, None, length=length,
                 solver=self.solver, blocked=self.blocked,
                 accel=self._accel, app_mask=am)
-            steps += length
-            done = np.asarray(carry_s.done)
+            done = np.asarray(state["carry"].done)
             if bool(done.all()):
-                break
-            if plateau_res is not None:
-                res = np.asarray(carry_s.residual)[:n]
-                if bool((~done[:n] & (res <= plateau_res)).any()):
-                    plateaued = True
-                    break
-                plateau_res = None     # probe only the first chunk
+                return True, float("inf")
+            running = ~done[:n]
+            res = np.asarray(state["carry"].residual)[:n]
+            probe = float(res[running].min()) if running.any() else float("inf")
+            return False, probe
 
+        plateaued = self._chunk_schedule(advance, plateau_res=plateau_res,
+                                         max_iters=max_iters)
+        carry_s = state["carry"]
         upd = jnp.asarray(list(members))
         self.carry = jax.tree_util.tree_map(
             lambda full, part: full.at[upd].set(part[:n]),
@@ -394,36 +838,32 @@ class OnlineSolver:
 
     def _converge_one(self, b: int, app_mask: Optional[np.ndarray],
                       plateau_res: Optional[float],
+                      max_iters: Optional[int] = None,
+                      allowed=None,
                       ) -> tuple[np.ndarray, bool]:
         """Single-member convergence through the unbatched chunk program
-        (bit-identical arithmetic to ``gp.solve``)."""
+        (bit-identical arithmetic to ``gp.solve``).  ``allowed`` carries
+        optional (allowed_e, allowed_c) direction masks — the §17
+        baseline-restricted rung."""
         inst_b = self._members[b]
         carry_b = jax.tree_util.tree_map(lambda x: x[b], self.carry)
         am = None if app_mask is None else jnp.asarray(
             np.asarray(app_mask, dtype=bool)[0])
+        ae, ac = (None, None) if allowed is None else allowed
 
-        steps, chunk = 0, gp._CHUNK_MIN
-        plateaued = suspect = False
-        while steps < self.max_iters:
-            length = min(chunk, gp._prev_pow2(self.max_iters - steps))
-            chunk = min(chunk * 2, gp._CHUNK_MAX)
-            carry_b, _ = gp._scan_chunk(
-                inst_b, carry_b, self._alpha, self._tol, self._patience,
-                self._max_iters, None, None, length=length,
+        state = {"carry": carry_b}
+
+        def advance(length: int) -> tuple[bool, float]:
+            state["carry"], _ = gp._scan_chunk(
+                inst_b, state["carry"], self._alpha, self._tol,
+                self._patience, self._max_iters, ae, ac, length=length,
                 solver=self.solver, blocked=self.blocked,
                 accel=self._accel, app_mask=am)
-            steps += length
-            if bool(carry_b.done):
-                break
-            if suspect:
-                # chunk 2 grace period expired without the done latch: this
-                # is a crawl, not a fixed point about to latch
-                plateaued = True
-                break
-            if plateau_res is not None:
-                suspect = float(carry_b.residual) <= plateau_res
-                plateau_res = None     # probe only the first chunk
+            return bool(state["carry"].done), float(state["carry"].residual)
 
+        plateaued = self._chunk_schedule(advance, plateau_res=plateau_res,
+                                         max_iters=max_iters)
+        carry_b = state["carry"]
         self._scatter_carry(b, carry_b)
         iters = np.asarray([int(carry_b.iters)], np.int32)
         self.total_iters += int(iters.sum())

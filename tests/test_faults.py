@@ -1,0 +1,168 @@
+"""Fault-tolerance regression: chaos traces, injection, the §17 ladder.
+
+Pins the adversarial layer (DESIGN.md §17) end to end:
+
+  * ``faults.chaos_trace`` is deterministic in its seed, replays cleanly,
+    and never strands a member without a live application;
+  * ``faults.FaultInjector`` produces both corruption modes
+    deterministically, and the online service *recovers* from each
+    (cold-restart path for NaN carries, debug-mode invariant screening for
+    de-normalized rows) — served state ends finite and non-corrupt;
+  * hostile events degrade, never diverge: isolating a destination sheds
+    its chains via ``apply_event`` instead of poisoning the instance, and
+    structurally invalid events raise;
+  * a member pinned at an impossible iteration budget climbs the full
+    escalation ladder down to the SPOC/LCOF baseline-mask floor and still
+    serves a feasible finite strategy.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import engine, events, faults, gp, network, traffic
+from repro.serve import OnlineSolver
+
+ALPHA, TOL = 0.1, 1e-4
+
+
+def _inst(scale=1.0):
+    return network.table_ii_instance("abilene", seed=0, rate_scale=scale)
+
+
+def _carry(inst):
+    phi0 = gp.init_phi(inst)
+    return engine.init_carry(inst, phi0, accel=engine.resolve_accel(True))
+
+
+# -- chaos traces -----------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_chaos_trace_deterministic_and_survivable():
+    members = events.pad_fleet([_inst(0.5), _inst(1.0)], spare_apps=1)
+    s1 = faults.chaos_trace(members, n_events=40, seed=5)
+    s2 = faults.chaos_trace(members, n_events=40, seed=5)
+    assert s1 == s2
+
+    flat = [ev for batch in s1 for ev in batch]
+    assert 0 < len(flat) <= 40         # invalidated recoveries may drop
+    assert any(len(batch) > 1 for batch in s1)   # storms batch events
+
+    # every batch replays cleanly and no member ever loses its last chain
+    state = list(members)
+    for batch in s1:
+        for ev in batch:
+            state[ev.member], _ = events.apply_event(state[ev.member], ev)
+        for m in state:
+            assert bool(np.asarray(m.stage_mask).any())
+    # surge recoveries flushed: rates end finite (stable region)
+    for m in state:
+        assert np.isfinite(np.asarray(m.r)).all()
+
+
+# -- fault injection --------------------------------------------------------
+
+
+def test_fault_injector_modes_and_determinism():
+    inst = _inst()
+    carry = _carry(inst)
+    inj = faults.FaultInjector(seed=0, p_inject=1.0)
+    seen = {}
+    for t in range(8):
+        corrupted, mode = inj.maybe_corrupt(carry, member=0, event_index=t)
+        assert mode is not None        # p_inject=1 always fires
+        seen.setdefault(mode, corrupted)
+    assert set(seen) == set(faults.FaultInjector.MODES)
+
+    nanc = seen["nan_carry"]
+    assert not np.isfinite(np.asarray(nanc.phi.e)).all()
+    assert not np.isfinite(float(nanc.cost))
+
+    den = seen["denorm_phi"]          # finite but simplex-violating
+    assert np.isfinite(np.asarray(den.phi.e)).all()
+    sv = traffic.strategy_violations(inst, den.phi)
+    assert float(sv.simplex) > 1e-3
+
+    inj2 = faults.FaultInjector(seed=0, p_inject=1.0)
+    for t in range(8):
+        inj2.maybe_corrupt(carry, member=0, event_index=t)
+    assert inj2.log == inj.log        # schedule is pure in the seed
+
+    with pytest.raises(ValueError):
+        faults.FaultInjector(modes=("rowhammer",))
+
+
+@pytest.mark.parametrize("mode", faults.FaultInjector.MODES)
+def test_online_service_recovers_from_injection(mode):
+    inj = faults.FaultInjector(seed=0, p_inject=1.0, modes=(mode,))
+    solver = OnlineSolver([_inst(0.5)], alpha=ALPHA, tol=TOL, accel=True,
+                          debug=True, fault_injector=inj)
+    rep = solver.process(events.RateScale(member=0, factor=1.2, app=0))
+    assert rep.injected == mode
+    assert np.isfinite(rep.cost)
+    health = solver.verify_member(0)
+    assert not health.corrupt, health
+
+
+# -- hostile events: degrade, never diverge ---------------------------------
+
+
+def test_isolating_a_destination_sheds_its_chains():
+    (m,) = events.pad_fleet([_inst()], spare_apps=1)
+    d = int(np.asarray(m.dst)[0])
+    shed = []
+    for v in np.flatnonzero(np.asarray(m.adj)[:, d]):
+        adj = np.asarray(m.adj)
+        if not (adj[v].any() or adj[:, v].any()):
+            continue                   # already taken down
+        m, eff = events.apply_event(m, events.NodeDown(member=0, node=int(v)))
+        shed += list(eff.shed)
+    # app 0's destination lost every in-edge: the chain departed (either
+    # shed as unreachable or gone with a failed node it was destined to)
+    assert not bool(np.asarray(m.stage_mask)[0].any())
+    assert float(np.asarray(m.r)[0].max()) == 0.0
+    assert np.isfinite(np.asarray(m.r)).all()
+    assert np.isfinite(np.asarray(m.link_param)).all()
+    # admission control now rejects arrivals aimed at the dead destination
+    spare = int(np.flatnonzero(~np.asarray(m.stage_mask).any(axis=1))[0])
+    with pytest.raises(ValueError):
+        events.apply_event(m, events.AppArrival(
+            member=0, app=spare, dst=d, rates=((1, 0.4),)))
+
+
+def test_hostile_events_raise_loudly():
+    (m,) = events.pad_fleet([_inst()], spare_apps=0)
+    live = np.asarray(m.adj)
+    i, j = (int(x) for x in np.argwhere(live)[0])
+    with pytest.raises(ValueError):    # LinkUp on a live edge
+        events.apply_event(m, events.LinkUp(member=0, i=i, j=j, capacity=1.0))
+    with pytest.raises(ValueError):    # arrival overflows the envelope
+        events.apply_event(m, events.AppArrival(
+            member=0, app=m.A, dst=0, rates=((1, 0.1),)))
+    with pytest.raises(ValueError):    # no dead slot to arrive into
+        events.apply_event(m, events.AppArrival(
+            member=0, app=0, dst=0, rates=((1, 0.1),)))
+    for bad in (float("nan"), float("inf"), 0.0, -1.0):
+        with pytest.raises(ValueError):
+            events.apply_event(m, events.RateScale(member=0, factor=bad))
+    with pytest.raises(ValueError):    # out-of-range node index
+        events.apply_event(m, events.NodeDown(member=0, node=m.V))
+
+
+# -- the escalation ladder --------------------------------------------------
+
+
+def test_impossible_budget_falls_back_to_baseline_mask():
+    solver = OnlineSolver([_inst()], alpha=ALPHA, tol=1e-12, max_iters=4,
+                          accel=True)
+    rep = solver.process(events.RateScale(member=0, factor=2.0, app=0))
+    # the watchdog climbed past the GP rungs to the baseline-mask floor
+    assert any(r.startswith("baseline:") for r in rep.rungs), rep.rungs
+    assert any(k.startswith("baseline:") for k in solver.ladder_hits)
+    assert "warm" in rep.rungs
+    # best-effort service, but never corrupt and never above the incumbent
+    assert not rep.converged
+    assert np.isfinite(rep.cost)
+    if np.isfinite(rep.incumbent_cost):
+        assert rep.cost <= rep.incumbent_cost * (1 + 2e-4)
+    assert not solver.verify_member(0).corrupt

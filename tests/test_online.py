@@ -124,3 +124,28 @@ def test_event_validation_and_trace_determinism():
     # every event in the trace must apply cleanly in sequence
     snaps = events.replay(members, t1)
     assert len(snaps) == 20
+
+
+def test_health_report_and_lkg_semantics():
+    inst = network.table_ii_instance("abilene", seed=0, rate_scale=0.5)
+    solver = OnlineSolver([inst], alpha=ALPHA, tol=TOL, accel=True)
+
+    rep = solver.process(events.RateScale(member=0, factor=1.5, app=0))
+    # healthy path: converged status, empty ladder, LKG bound honoured
+    assert rep.status == "converged" and rep.converged
+    assert rep.rungs == () and not rep.rolled_back and not rep.quarantined
+    assert np.isfinite(rep.incumbent_cost)
+    assert rep.cost <= rep.incumbent_cost * (1 + 2 * 1e-4)
+    # the serve advanced the last-known-good checkpoint
+    _phi_lkg, cost_lkg = solver.incumbent(0)
+    assert cost_lkg == pytest.approx(rep.cost)
+
+    # the runtime invariant checker is clean on a healthy fleet
+    for h in solver.verify_fleet():
+        assert not h.corrupt and np.isfinite(h.cost)
+        assert h.simplex <= 1e-5 and h.dead_link_mass <= 1e-6
+
+    # a no-op event must not demote the verdict (fixed-point latches and
+    # skip gates both count as converged)
+    rep = solver.process(events.RateScale(member=0, factor=1.0, app=0))
+    assert rep.status == "converged" and rep.converged

@@ -1,26 +1,28 @@
-"""Marker hygiene: packet-level simulation never runs in the quick tier.
+"""Marker hygiene: expensive generators never run in the quick tier.
 
-``simulate()`` burns seconds to minutes per call; CI's quick tier
+``simulate()`` burns seconds to minutes per call and ``chaos_trace()``
+replays every event it samples through ``apply_event``; CI's quick tier
 deselects ``-m "not slow"`` and must stay fast.  This audit walks every
-test module's AST and fails if a test function calls ``simulate`` (directly
-or as ``module.simulate``) without carrying ``@pytest.mark.slow`` — a
-regression that would otherwise surface only as a mysteriously slow CI
-quick tier.
+test module's AST and fails if a test function calls one of the audited
+functions (directly or as ``module.fn``) without carrying
+``@pytest.mark.slow`` — a regression that would otherwise surface only as
+a mysteriously slow CI quick tier.
 """
 
 import ast
 import pathlib
 
 TESTS = pathlib.Path(__file__).parent
+AUDITED = {"simulate", "chaos_trace"}
 
 
-def _calls_simulate(node: ast.AST) -> bool:
+def _calls_audited(node: ast.AST) -> bool:
     for sub in ast.walk(node):
         if isinstance(sub, ast.Call):
             fn = sub.func
-            if isinstance(fn, ast.Name) and fn.id == "simulate":
+            if isinstance(fn, ast.Name) and fn.id in AUDITED:
                 return True
-            if isinstance(fn, ast.Attribute) and fn.attr == "simulate":
+            if isinstance(fn, ast.Attribute) and fn.attr in AUDITED:
                 return True
     return False
 
@@ -34,16 +36,16 @@ def _is_slow_marked(fn: ast.FunctionDef) -> bool:
     return False
 
 
-def test_every_simulate_caller_is_slow_marked():
+def test_every_expensive_caller_is_slow_marked():
     offenders = []
     for path in sorted(TESTS.glob("test_*.py")):
         tree = ast.parse(path.read_text(), filename=str(path))
         for node in ast.walk(tree):
             if (isinstance(node, ast.FunctionDef)
                     and node.name.startswith("test_")
-                    and _calls_simulate(node)
+                    and _calls_audited(node)
                     and not _is_slow_marked(node)):
                 offenders.append(f"{path.name}::{node.name}")
     assert not offenders, (
-        "test functions call simulate() without @pytest.mark.slow: "
-        f"{offenders}")
+        f"test functions call one of {sorted(AUDITED)} without "
+        f"@pytest.mark.slow: {offenders}")
