@@ -16,20 +16,38 @@ RESULTS_DIR = os.path.join(_REPO_ROOT, "results")
 BENCH_PATH = os.path.join(_REPO_ROOT, "BENCH_gp.json")
 
 
+def _default_backend() -> str:
+    """The JAX backend rows are stamped with (lazy import — keep the module
+    importable without initializing a device)."""
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "cpu"
+
+
 def bench_record(bench: str, *, scenario: str, V: int, solver: str,
-                 seconds: float, iters: int | None = None, **extra) -> dict:
+                 seconds: float, iters: int | None = None,
+                 backend: str | None = None, **extra) -> dict:
     """Append one perf row to the top-level ``BENCH_gp.json``.
 
-    Rows are keyed by (bench, scenario, V, solver): re-running a driver
-    replaces its previous rows instead of growing the file, so the
-    committed trajectory stays one row per measurement point.
+    Rows are keyed by (bench, scenario, V, solver, backend): re-running a
+    driver replaces its previous rows instead of growing the file, so the
+    committed trajectory stays one row per measurement point.  ``backend``
+    defaults to ``jax.default_backend()`` — timings measured on different
+    backends are different measurement points (the per-backend AUTO
+    dispatch crossover in ``traffic._derive_auto_min_v`` depends on this),
+    and rows written before the key existed count as ``"cpu"`` everywhere
+    rows are consumed.
 
     ``seconds`` is wall clock for the measured unit; when ``iters`` (total
     committed GP iterations) is given a derived ``s_per_iter`` is stored.
     Extra keyword fields (e.g. ``speedup``, ``n``) are stored verbatim.
     """
     row = {"bench": bench, "scenario": scenario, "V": int(V),
-           "solver": solver, "seconds": round(float(seconds), 6)}
+           "solver": solver,
+           "backend": backend if backend is not None else _default_backend(),
+           "seconds": round(float(seconds), 6)}
     if iters is not None:
         row["iters"] = int(iters)
         row["s_per_iter"] = round(float(seconds) / max(int(iters), 1), 8)
@@ -41,10 +59,8 @@ def bench_record(bench: str, *, scenario: str, V: int, solver: str,
                 rows = json.load(f)["rows"]
         except (json.JSONDecodeError, KeyError):
             rows = []
-    key = (row["bench"], row["scenario"], row["V"], row["solver"])
-    rows = [r for r in rows
-            if (r.get("bench"), r.get("scenario"), r.get("V"),
-                r.get("solver")) != key]
+    key = _row_key(row)
+    rows = [r for r in rows if _row_key(r) != key]
     rows.append(row)
     with open(BENCH_PATH, "w") as f:
         json.dump({"rows": rows}, f, indent=1)
@@ -67,8 +83,9 @@ _ITERS_NOISE_FLOOR = 8    # don't flag e.g. 5 -> 7 on trivially-small solves
 
 
 def _row_key(row: dict) -> tuple:
+    # rows written before the backend key existed were all CPU measurements
     return (row.get("bench"), row.get("scenario"), row.get("V"),
-            row.get("solver"))
+            row.get("solver"), row.get("backend", "cpu"))
 
 
 def _pair_metrics(row: dict, ref: dict):

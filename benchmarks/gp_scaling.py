@@ -39,7 +39,78 @@ def time_batched_iteration(name: str, B: int, chunk: int = 32) -> float:
     return t.us / chunk / B
 
 
-def main():
+# Metro-scale leg (DESIGN.md §18): per-iteration cost of the sparse
+# neighbor-list solve path vs the dense batched-LU path on O(V)-edge metro
+# graphs.  Above _DENSE_MAX_V the dense path is not measured — a V=1000
+# dense iteration factors (ladder * A * K1) 1000^3 LUs per step, which this
+# box cannot complete in a sane budget — and is recorded as an explicit
+# status="timeout" row at the budget wall clock instead (the honest
+# "dense is not viable here" data point the scale claim rests on).
+_METRO_VS = (300, 600, 1000)
+_DENSE_MAX_V = 600
+_DENSE_BUDGET_S = 600.0
+
+
+def metro_leg(rows: dict, *, smoke: bool = False) -> None:
+    """Sparse-vs-dense per-iteration rows on metro-scale graphs.
+
+    ``smoke`` runs only the V=60 small-world point (the CI sparse bench
+    row); the full leg covers V in ``_METRO_VS`` on both metro builders.
+    The V=60 point is always included so the committed baseline carries a
+    pair for the CI smoke run to gate against.
+    """
+    specs = [("sw", 60)]
+    if not smoke:
+        specs += [(t, v) for t in ("sw", "geant") for v in _METRO_VS]
+    out = {}
+    for topo, V in specs:
+        inst = network.metro_instance(topo, V)
+        E = network.n_edges(inst)
+        reps = 3 if V <= 300 else 1
+        us_sparse = time_gp_iteration(inst, reps=reps, solver="sparse")
+        row = {"V": V, "edges": E, "sparse_us": us_sparse}
+        extra = {}
+        if V <= _DENSE_MAX_V:
+            us_dense = time_gp_iteration(network.without_sparse(inst),
+                                         reps=reps, solver="batched_lu")
+            row["dense_us"] = us_dense
+            row["speedup"] = us_dense / max(us_sparse, 1e-9)
+            extra["speedup"] = round(row["speedup"], 3)
+            bench_record("gp_scaling", scenario=f"metro-{topo}", V=V,
+                         solver="batched_lu", seconds=us_dense / 1e6,
+                         iters=1)
+        else:
+            row["dense_us"] = None
+            bench_record("gp_scaling", scenario=f"metro-{topo}", V=V,
+                         solver="batched_lu", seconds=_DENSE_BUDGET_S,
+                         status="timeout")
+        bench_record("gp_scaling", scenario=f"metro-{topo}", V=V,
+                     solver="sparse", seconds=us_sparse / 1e6, iters=1,
+                     edges=E, **extra)
+        dense_str = ("timeout" if row["dense_us"] is None
+                     else f"{row['dense_us']:.0f}us")
+        emit(f"gp_metro_{topo}_V{V}", us_sparse, f"E:{E}|dense:{dense_str}")
+        out[f"{topo}-{V}"] = row
+    rows["metro"] = out
+
+
+def main(argv=()):
+    # argv defaults to () — NOT sys.argv — because benchmarks/run.py calls
+    # mod.main() programmatically with run.py's own flags still on sys.argv.
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="benchmarks.gp_scaling")
+    ap.add_argument("--sparse", action="store_true",
+                    help="run only the metro-scale sparse-vs-dense leg")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --sparse: only the V=60 CI smoke point")
+    args = ap.parse_args(list(argv))
+    if args.sparse:
+        rows = {}
+        metro_leg(rows, smoke=args.smoke)
+        save_json("gp_metro.json", rows)
+        return
+
     rows = {}
     for name in ["abilene", "balanced-tree", "fog", "geant", "sw-queue"]:
         inst = network.table_ii_instance(name, seed=0)
@@ -128,4 +199,6 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(sys.argv[1:])

@@ -109,7 +109,80 @@ def markdown_table(rows: list[dict]) -> str:
     return hdr + body
 
 
+# ---------------------------------------------------------------------------
+# GP stage-sweep arithmetic intensity (DESIGN.md §18)
+#
+# The dense fixed-point sweep x <- b + M x moves a V^2 matrix per stage per
+# sweep; the sparse paths move O(E) values.  Counting bytes from V^2 for the
+# sparse kernels would overstate their intensity by V^2/E (~V/D on metro
+# graphs), so these rows derive bytes from the actual resident operands:
+#
+#   dense:  flops 2V^2,  bytes 4(V^2 + 2V)            (f32 matrix + x, b)
+#   nbr:    flops 2E,    bytes 4(2VD + 2V)            (padded vals+idx, x, b)
+#   bsr:    flops 2*nb*B^2, bytes 4(nb*B^2 + nb*2B)   (nonzero blocks only)
+#
+# per stage per sweep, where D = max degree, B = SPARSE_BLOCK and nb = count
+# of nonzero partition blocks.  Intensity is flops/bytes — all three sit far
+# below the CPU/TPU ridge point, i.e. every sweep variant is memory-bound
+# and the E-vs-V^2 byte ratio IS the expected speedup, which is what the
+# metro rows in BENCH_gp.json measure empirically.
+
+
+def gp_sparse_rows(vs: tuple = (100, 300, 1000)) -> list[dict]:
+    import numpy as np
+
+    from repro.core import network
+    from repro.kernels.sparse_solve import SPARSE_BLOCK
+
+    rows = []
+    for topo in ("sw", "geant"):
+        for V in vs:
+            inst = network.metro_instance(topo, V)
+            E = network.n_edges(inst)
+            D = int(inst.max_degree)
+            nb = int(np.asarray(inst.blk_mask).sum())
+            dense_flops, dense_bytes = 2.0 * V * V, 4.0 * (V * V + 2 * V)
+            nbr_flops, nbr_bytes = 2.0 * E, 4.0 * (2.0 * V * D + 2 * V)
+            bsr_flops = 2.0 * nb * SPARSE_BLOCK ** 2
+            bsr_bytes = 4.0 * nb * (SPARSE_BLOCK ** 2 + 2 * SPARSE_BLOCK)
+            rows.append({
+                "topo": topo, "V": V, "E": E, "max_degree": D,
+                "nnz_blocks": nb, "block": SPARSE_BLOCK,
+                "dense_intensity": dense_flops / dense_bytes,
+                "nbr_intensity": nbr_flops / nbr_bytes,
+                "bsr_intensity": bsr_flops / bsr_bytes,
+                "dense_bytes_per_sweep": dense_bytes,
+                "nbr_bytes_per_sweep": nbr_bytes,
+                "bsr_bytes_per_sweep": bsr_bytes,
+                "byte_ratio_dense_over_nbr": dense_bytes / nbr_bytes,
+            })
+    return rows
+
+
+def gp_markdown_table(rows: list[dict]) -> str:
+    hdr = ("| topo | V | E | dense AI | nbr AI | bsr AI | dense/nbr bytes |\n"
+           "|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['topo']} | {r['V']} | {r['E']} | "
+                 f"{r['dense_intensity']:.3f} | {r['nbr_intensity']:.3f} | "
+                 f"{r['bsr_intensity']:.3f} | "
+                 f"{r['byte_ratio_dense_over_nbr']:.1f}x |\n")
+    return hdr + body
+
+
 def main() -> list[dict]:
+    gp_rows = gp_sparse_rows()
+    for r in gp_rows:
+        emit(f"roofline_gp_{r['topo']}_V{r['V']}",
+             r["nbr_bytes_per_sweep"] / 1e6,
+             f"nbr_AI:{r['nbr_intensity']:.3f}|"
+             f"dense_bytes:{r['byte_ratio_dense_over_nbr']:.1f}x")
+    save_json("roofline_gp.json", gp_rows)
+    with open(os.path.join(RESULTS_DIR, "roofline_gp.md"), "w") as f:
+        f.write(gp_markdown_table(gp_rows))
+    print(f"# wrote {len(gp_rows)} GP sweep rows -> results/roofline_gp.md")
+
     dd = os.path.join(RESULTS_DIR, "dryrun")
     recs = load_records(dd, "pod")
     rows = [analyze(r) for r in recs]

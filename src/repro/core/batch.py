@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import network as network_mod
 from repro.core.network import Instance
 from repro.core.traffic import Phi
 
@@ -41,6 +42,15 @@ from repro.core.traffic import Phi
 # builder applies to real stages (DESIGN.md §8) so padded entries can never
 # introduce a zero-size degeneracy if a masked stage is ever touched.
 _L_FILL = 0.01
+
+# Heterogeneous-degree guard for sparse batches: padding every member's
+# neighbor lists to the family max degree D costs O(V * D) per member, so a
+# family mixing a near-regular metro graph with a hub-heavy one would
+# silently densify the cheap members' sparse representation.  When the max
+# over min member degree exceeds this ratio, ``pad_instances`` refuses
+# (hetero_degree="raise", the default) unless the caller explicitly opts
+# into padding ("pad") or falls back to dense ("strip").
+_HETERO_DEGREE_RATIO = 4
 
 
 def next_pow2(n: int) -> int:
@@ -58,8 +68,27 @@ def _pad_axis(x: jnp.ndarray, axis: int, target: int, fill) -> jnp.ndarray:
     return jnp.pad(x, widths, constant_values=fill)
 
 
+def _pad_degree(nbr: jnp.ndarray, mask: jnp.ndarray, D: int
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad neighbor-list columns to degree ``D`` (self-index, mask False)."""
+    cur = int(nbr.shape[1])
+    if cur == D:
+        return nbr, mask
+    n = nbr.shape[0]
+    self_col = jnp.tile(jnp.arange(n, dtype=nbr.dtype)[:, None],
+                        (1, D - cur))
+    return (jnp.concatenate([nbr, self_col], axis=1),
+            _pad_axis(mask, 1, D, False))
+
+
 def pad_instance(inst: Instance, V: int, A: int, K1: int) -> Instance:
-    """Pad one instance to the (V, A, K1) envelope (no batch axis yet)."""
+    """Pad one instance to the (V, A, K1) envelope (no batch axis yet).
+
+    A sparse topology (``inst.has_sparse``) is re-derived from the padded
+    adjacency: dead nodes are isolated (self-pointing all-masked neighbor
+    rows), so the max degree — and the per-sweep O(E) work — is unchanged,
+    only the row count grows to V.
+    """
     if V < inst.V or A < inst.A or K1 < inst.K1:
         raise ValueError(
             f"target shape ({V},{A},{K1}) smaller than instance "
@@ -81,11 +110,14 @@ def pad_instance(inst: Instance, V: int, A: int, K1: int) -> Instance:
     n_tasks = _pad_axis(inst.n_tasks, 0, A, 0)
     stage_mask = _pad_axis(_pad_axis(inst.stage_mask, 1, K1, False), 0, A, False)
 
-    return dataclasses.replace(
+    out = dataclasses.replace(
         inst, adj=adj, link_param=link_param, comp_param=comp_param,
         wnode=wnode, L=L, w=w, r=r, dst=dst, n_tasks=n_tasks,
         stage_mask=stage_mask,
     )
+    if inst.has_sparse:
+        out = network_mod.with_sparse(out)
+    return out
 
 
 def batch_envelope(insts: Sequence[Instance]) -> tuple[int, int, int]:
@@ -97,7 +129,8 @@ def batch_envelope(insts: Sequence[Instance]) -> tuple[int, int, int]:
     )
 
 
-def pad_instances(insts: Sequence[Instance]) -> Instance:
+def pad_instances(insts: Sequence[Instance], *,
+                  hetero_degree: str = "raise") -> Instance:
     """Stack heterogeneous instances into one Instance with a leading batch
     axis (every array field becomes ``(B, ...)``).
 
@@ -113,6 +146,17 @@ def pad_instances(insts: Sequence[Instance]) -> Instance:
     vary along a traced batch axis (``scenarios.run_sweep`` groups by kind
     first).
 
+    Sparse topologies (``with_sparse``) must be attached to *every* member
+    or none — a mixed family raises (silent stripping would silently change
+    solver dispatch).  Sparse members' neighbor lists are padded to the
+    family max degree; when the family's degrees are very different
+    (max > ``_HETERO_DEGREE_RATIO`` × min) that padding would densify the
+    low-degree members' O(E) representation, so ``hetero_degree`` governs
+    it explicitly: ``"raise"`` (default) refuses, ``"pad"`` pads anyway
+    (opt-in, the batch stays sparse but low-degree members pay the hub
+    member's D), ``"strip"`` falls back to the dense-only representation
+    for the whole family.
+
     Example::
 
         >>> insts = [network.table_ii_instance("abilene", seed=s)
@@ -124,14 +168,55 @@ def pad_instances(insts: Sequence[Instance]) -> Instance:
     """
     if not insts:
         raise ValueError("pad_instances needs at least one instance")
+    if hetero_degree not in ("raise", "pad", "strip"):
+        raise ValueError(
+            f"hetero_degree must be 'raise'|'pad'|'strip', got {hetero_degree!r}")
     kinds = {(i.link_kind, i.comp_kind) for i in insts}
     if len(kinds) > 1:
         raise ValueError(
             f"cannot batch across cost families {sorted(kinds)}; group "
             "instances by (link_kind, comp_kind) first"
         )
+    flags = {i.has_sparse for i in insts}
+    if flags == {True, False}:
+        raise ValueError(
+            "cannot batch a mix of sparse and dense members; attach "
+            "network.with_sparse to every member or strip it from all "
+            "(network.without_sparse)"
+        )
+    sparse = flags == {True}
+    if sparse:
+        degs = [max(1, int(i.max_degree)) for i in insts]
+        if max(degs) > _HETERO_DEGREE_RATIO * min(degs):
+            if hetero_degree == "strip":
+                insts = [network_mod.without_sparse(i) for i in insts]
+                sparse = False
+            elif hetero_degree == "raise":
+                raise ValueError(
+                    f"heterogeneous max degrees {min(degs)}..{max(degs)} "
+                    f"(> {_HETERO_DEGREE_RATIO}x spread): padding would "
+                    "densify the sparse representation. Pass "
+                    "hetero_degree='pad' to pad anyway or 'strip' to fall "
+                    "back to dense."
+                )
+            # "pad": explicit opt-in, fall through to degree padding below
     V, A, K1 = batch_envelope(insts)
     padded = [pad_instance(i, V, A, K1) for i in insts]
+    if sparse:
+        D = max(int(p.out_nbr.shape[1]) for p in padded)
+        BD = max(int(p.blk_nbr.shape[1]) for p in padded)
+        padded = [
+            dataclasses.replace(
+                p,
+                **dict(zip(("out_nbr", "out_mask"),
+                           _pad_degree(p.out_nbr, p.out_mask, D))),
+                **dict(zip(("in_nbr", "in_mask"),
+                           _pad_degree(p.in_nbr, p.in_mask, D))),
+                **dict(zip(("blk_nbr", "blk_mask"),
+                           _pad_degree(p.blk_nbr, p.blk_mask, BD))),
+            )
+            for p in padded
+        ]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
 
 

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import batch as batch_mod
 from repro.core import compat, engine, gp
 from repro.core.network import Instance
 from repro.core.traffic import Phi
@@ -106,10 +107,14 @@ def _pad_tree_apps(tree, A_pad: int, *, batched: bool = False):
     return jax.tree_util.tree_map(padA, tree)
 
 
+_N_SPARSE = 7   # sparse-topology arrays threaded through the chunk program
+
+
 @functools.lru_cache(maxsize=None)
-def _chunk_program(mesh: Mesh, axis: str, link_kind: int, comp_kind: int,
-                   length: int, scaled: bool, solver: str, blocked: str,
-                   has_masks: bool, accel=None):
+def _chunk_program(mesh: Mesh, axis: str, node_axis, link_kind: int,
+                   comp_kind: int, length: int, scaled: bool, solver: str,
+                   blocked: str, has_masks: bool, has_sparse: bool = False,
+                   accel=None):
     """Build the jitted shard_map'd chunk for one (mesh, config) combination.
 
     The stacked Instance is decomposed into per-application (app-sharded)
@@ -121,6 +126,21 @@ def _chunk_program(mesh: Mesh, axis: str, link_kind: int, comp_kind: int,
     resolved hashable :class:`engine.AccelConfig` or None) is part of the
     cache key, like ``solver``/``blocked``.
 
+    With ``node_axis`` set (the 2-D app × node-space mesh, DESIGN.md §18)
+    the V² strategy rows are *storage*-sharded: ``phi_e`` arrives as a
+    contiguous (Vp / node_shards)-row slab per node shard — slabs align
+    with the BFS graph-partition blocks, since both are contiguous index
+    ranges — is ``all_gather``-ed to full V inside the chunk (one gather
+    per chunk, not per iteration), and each shard's slab is sliced back
+    out at the end.  Per-iteration compute is replicated across the node
+    shards *except* the blocked-set tagged sweep, which runs genuinely
+    node-parallel over the row slabs (``engine._tagged_nbr_sharded``).
+    Replication makes the 2-D trajectories exactly the 1-D ones.
+
+    ``has_sparse`` threads the instance's 7 sparse-topology arrays
+    (replicated) into the per-shard Instance so the "sparse" stage solver
+    and the neighbor-list tagged sweep see them.
+
     The §15 Anderson ring buffers travel as *opaque per-shard slabs*: the
     flat feature axis of ``ax``/``af`` is sharded (``P(None, None, axis)``)
     into slices exactly the size of each shard's locally flattened phi, and
@@ -129,7 +149,11 @@ def _chunk_program(mesh: Mesh, axis: str, link_kind: int, comp_kind: int,
     history count ``ak`` are replicated (the winning rung and the push
     cadence are shard-identical by construction).
     """
+    node_shards = int(mesh.shape[node_axis]) if node_axis is not None else 1
     app = P(None, axis)     # (B, A, ...): member axis plain, apps sharded
+    # (B, A, K1, Vp, V): member plain, apps sharded, strategy ROWS sharded
+    # along the node-space axis (1-D mesh: plain app sharding)
+    row = P(None, axis, None, node_axis, None) if node_axis else app
     buf = P(None, None, axis)   # (B, m, N): Anderson slab, N axis sharded
     rep = P()
 
@@ -138,16 +162,26 @@ def _chunk_program(mesh: Mesh, axis: str, link_kind: int, comp_kind: int,
               phi_e, phi_c,                               # app-sharded carry
               best_cost, stall, done, iters, cost, residual,
               aalpha, ax, af, ak,                         # accel carry (§15)
-              alpha, tol, patience, max_iters, *masks):
+              alpha, tol, patience, max_iters, *extra):
 
         def one(L, w, r, dst, n_tasks, stage_mask, adj, link_param,
                 comp_param, wnode, phi_e, phi_c, best_cost, stall, done,
-                iters, cost, residual, aalpha, ax, af, ak, ae, ac):
+                iters, cost, residual, aalpha, ax, af, ak,
+                out_nbr, out_mask, in_nbr, in_mask, node_part,
+                blk_nbr, blk_mask, ae, ac):
+            V = adj.shape[-1]
+            if node_axis is not None:
+                # storage-sharded rows -> full strategy for the iteration
+                phi_e = jax.lax.all_gather(
+                    phi_e, node_axis, axis=2, tiled=True)[:, :, :V]
             inst_l = Instance(
                 adj=adj, link_param=link_param, link_kind=link_kind,
                 comp_param=comp_param, comp_kind=comp_kind,
                 L=L, w=w, wnode=wnode, r=r, dst=dst, n_tasks=n_tasks,
                 stage_mask=stage_mask,
+                out_nbr=out_nbr, out_mask=out_mask,
+                in_nbr=in_nbr, in_mask=in_mask, node_part=node_part,
+                blk_nbr=blk_nbr, blk_mask=blk_mask,
             )
             carry = engine.ScanCarry(
                 phi=Phi(e=phi_e, c=phi_c), best_cost=best_cost, stall=stall,
@@ -157,28 +191,59 @@ def _chunk_program(mesh: Mesh, axis: str, link_kind: int, comp_kind: int,
             carry, (cs, rs) = engine.scan_chunk(
                 inst_l, carry, alpha, tol, patience, max_iters, ae, ac,
                 length=length, scaled=scaled, solver=solver, blocked=blocked,
-                axis=axis, accel=accel,
+                axis=axis, node_axis=node_axis, node_shards=node_shards,
+                accel=accel,
             )
-            return (carry.phi.e, carry.phi.c, carry.best_cost, carry.stall,
+            pe = carry.phi.e
+            if node_axis is not None:
+                # slice this shard's row slab back out (pad V -> Vp first)
+                Vp = -(-V // node_shards) * node_shards
+                rl = Vp // node_shards
+                pe = jnp.pad(pe, ((0, 0), (0, 0), (0, Vp - V), (0, 0)))
+                i0 = jax.lax.axis_index(node_axis) * rl
+                pe = jax.lax.dynamic_slice_in_dim(pe, i0, rl, axis=2)
+            return (pe, carry.phi.c, carry.best_cost, carry.stall,
                     carry.done, carry.iters, carry.cost, carry.residual,
                     carry.alpha, carry.ax, carry.af, carry.ak,
                     cs, rs)
 
+        off = _N_SPARSE if has_sparse else 0
+        sparse_arrs = extra[:off] if has_sparse else (None,) * _N_SPARSE
+        masks = extra[off:]
         ae, ac = masks if has_masks else (None, None)
-        in_axes = (0,) * 22 + ((0, 0) if has_masks else (None, None))
+        in_axes = ((0,) * 22 + ((0,) * _N_SPARSE if has_sparse
+                                else (None,) * _N_SPARSE)
+                   + ((0, 0) if has_masks else (None, None)))
         return jax.vmap(one, in_axes=in_axes)(
             L, w, r, dst, n_tasks, stage_mask, adj, link_param, comp_param,
             wnode, phi_e, phi_c, best_cost, stall, done, iters, cost,
-            residual, aalpha, ax, af, ak, ae, ac)
+            residual, aalpha, ax, af, ak, *sparse_arrs, ae, ac)
 
-    in_specs = ((app,) * 6 + (rep,) * 4 + (app, app) + (rep,) * 6
+    in_specs = ((app,) * 6 + (rep,) * 4 + (row, app) + (rep,) * 6
                 + (rep, buf, buf, rep)
-                + (rep,) * 4 + ((app, app) if has_masks else ()))
-    out_specs = ((app, app) + (rep,) * 6 + (rep, buf, buf, rep)
+                + (rep,) * 4
+                + ((rep,) * _N_SPARSE if has_sparse else ())
+                + ((app, app) if has_masks else ()))
+    out_specs = ((row, app) + (rep,) * 6 + (rep, buf, buf, rep)
                  + (rep, rep))
     smapped = compat.shard_map(chunk, mesh=mesh, in_specs=in_specs,
                                out_specs=out_specs, check=False)
     return jax.jit(smapped)
+
+
+def _pad_rows(x: jnp.ndarray, Vp: int, ax: int) -> jnp.ndarray:
+    """Zero-pad axis ``ax`` (a V-row axis) up to ``Vp`` entries."""
+    pad = Vp - x.shape[ax]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[ax] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _sparse_args(binst: Instance) -> tuple:
+    return (binst.out_nbr, binst.out_mask, binst.in_nbr, binst.in_mask,
+            binst.node_part, binst.blk_nbr, binst.blk_mask)
 
 
 def solve_sharded_batched(
@@ -186,6 +251,7 @@ def solve_sharded_batched(
     mesh: Mesh,
     *,
     axis: str = "stage",
+    node_axis: str | None = None,
     alpha: float = 0.02,
     max_iters: int = 300,
     tol: float = 1e-4,
@@ -194,6 +260,7 @@ def solve_sharded_batched(
     allowed_e: jnp.ndarray | None = None,
     allowed_c: jnp.ndarray | None = None,
     scaled: bool = False,
+    compact: bool = True,
     solver: str = "auto",
     blocked: str = "bitset",
     accel=None,
@@ -205,16 +272,31 @@ def solve_sharded_batched(
     done-latch scan ``gp.solve`` runs (``engine.scan_chunk``), so large
     ensembles spread their per-member app slabs across the mesh while the
     host reads back only the batched ``done`` latch once per ``_CHUNK``
-    iterations.  No convergence compaction on this path (members stay in
-    their mesh lanes); histories follow the dense :class:`gp.GPScan`
-    contract.  ``solver=``/``blocked=``/``accel=`` dispatch exactly as in
-    ``gp.solve`` (accelerated sharded trajectories match the accelerated
-    single-device ones — tests/test_accel.py).
+    iterations.  Histories follow the dense :class:`gp.GPScan` contract.
+    ``solver=``/``blocked=``/``accel=`` dispatch exactly as in ``gp.solve``
+    (accelerated sharded trajectories match the accelerated single-device
+    ones — tests/test_accel.py).
+
+    ``node_axis`` names the second mesh axis of a 2-D (app × node-space)
+    mesh (DESIGN.md §18): strategy rows are storage-sharded along it and
+    the blocked-set tagged sweep runs node-parallel; trajectories are
+    exactly the 1-D-mesh (and single-device) ones.
+
+    ``compact=True`` (default) re-packs the *member lanes* at chunk
+    boundaries exactly like ``gp.solve_batched``: converged members retire
+    (their finals snapshot into the result buffers) and the active set
+    compacts into the next power-of-two bucket, so a long-tailed metro
+    ensemble stops paying mesh time for members that finished early.
+    Bucket sizes are quantized to powers of two to bound XLA recompiles.
     """
     accel = engine.resolve_accel(accel)
     n_shards = mesh.shape[axis]
+    node_shards = int(mesh.shape[node_axis]) if node_axis is not None else 1
     B = int(binst.adj.shape[0])
+    V = int(binst.adj.shape[-1])
+    Vp = -(-V // node_shards) * node_shards
     binst_p, A_orig = _pad_apps(binst, n_shards, batched=True)
+    has_sparse = binst_p.has_sparse
     A_pad = int(binst_p.L.shape[1])
     if phi0 is None:
         phi0 = jax.vmap(gp.init_phi)(binst_p)
@@ -231,49 +313,111 @@ def solve_sharded_batched(
     alpha_, tol_ = jnp.float32(alpha), jnp.float32(tol)
     patience_, max_iters_ = jnp.int32(patience), jnp.int32(max_iters)
 
+    # host-side result buffers, indexed by original member id (§10 lane
+    # compaction — mirrors gp.solve_batched)
     cost_hist = np.zeros((B, max_iters + 1), np.float32)
     cost_hist[:, 0] = np.asarray(carry.cost)
     res_hist = np.zeros((B, max_iters), np.float32)
+    out_phi_e = np.asarray(phi0.e).copy()
+    out_phi_c = np.asarray(phi0.c).copy()
+    out_cost = np.asarray(carry.cost).copy()
+    out_res = np.full((B,), np.inf, np.float32)
+    out_iters = np.zeros((B,), np.int32)
+    written = np.zeros((B,), np.int64)
 
+    ids = np.arange(B)                    # lane -> original member (-1: pad)
+    inst_p, ae_p, ac_p = binst_p, allowed_e, allowed_c
     c = carry
+    if compact:
+        bucket0 = batch_mod.next_pow2(B)
+        if bucket0 > B:
+            sel_j = jnp.asarray(np.concatenate(
+                [np.arange(B), np.zeros(bucket0 - B, np.int64)]))
+            inst_p = gp._gather(inst_p, sel_j)
+            c = gp._gather(c, sel_j)
+            if ae_p is not None:
+                ae_p = ae_p[sel_j]
+            if ac_p is not None:
+                ac_p = ac_p[sel_j]
+            pad0 = jnp.arange(bucket0) >= B
+            c = c._replace(done=c.done | pad0)
+            ids = np.concatenate([ids, np.full(bucket0 - B, -1)])
+
     steps = 0
     while steps < max_iters:
         length = min(_CHUNK, max_iters - steps)
-        fn = _chunk_program(mesh, axis, binst_p.link_kind, binst_p.comp_kind,
-                            length, scaled, solver, blocked, has_masks,
-                            accel)
-        mask_args = (allowed_e, allowed_c) if has_masks else ()
+        fn = _chunk_program(mesh, axis, node_axis, inst_p.link_kind,
+                            inst_p.comp_kind, length, scaled, solver,
+                            blocked, has_masks, has_sparse, accel)
+        sparse_args = _sparse_args(inst_p) if has_sparse else ()
+        mask_args = (ae_p, ac_p) if has_masks else ()
+        phi_e_in = _pad_rows(c.phi.e, Vp, ax=3)
         (phi_e, phi_c, best, stall, done, iters, cost, residual,
          aalpha, ax, af, ak, cs, rs
-         ) = fn(binst_p.L, binst_p.w, binst_p.r, binst_p.dst,
-                binst_p.n_tasks, binst_p.stage_mask, binst_p.adj,
-                binst_p.link_param, binst_p.comp_param, binst_p.wnode,
-                c.phi.e, c.phi.c, c.best_cost, c.stall, c.done, c.iters,
+         ) = fn(inst_p.L, inst_p.w, inst_p.r, inst_p.dst,
+                inst_p.n_tasks, inst_p.stage_mask, inst_p.adj,
+                inst_p.link_param, inst_p.comp_param, inst_p.wnode,
+                phi_e_in, c.phi.c, c.best_cost, c.stall, c.done, c.iters,
                 c.cost, c.residual, c.alpha, c.ax, c.af, c.ak,
                 alpha_, tol_, patience_, max_iters_,
-                *mask_args)
-        c = engine.ScanCarry(phi=Phi(e=phi_e, c=phi_c), best_cost=best,
-                             stall=stall, done=done, iters=iters, cost=cost,
-                             residual=residual, alpha=aalpha, ax=ax, af=af,
-                             ak=ak)
-        cost_hist[:, steps + 1: steps + 1 + length] = np.asarray(cs)
-        res_hist[:, steps: steps + length] = np.asarray(rs)
+                *sparse_args, *mask_args)
+        c = engine.ScanCarry(phi=Phi(e=phi_e[:, :, :, :V], c=phi_c),
+                             best_cost=best, stall=stall, done=done,
+                             iters=iters, cost=cost, residual=residual,
+                             alpha=aalpha, ax=ax, af=af, ak=ak)
+        valid = ids >= 0
+        vids = ids[valid]
+        cost_hist[vids, steps + 1: steps + 1 + length] = np.asarray(cs)[valid]
+        res_hist[vids, steps: steps + length] = np.asarray(rs)[valid]
         steps += length
-        if bool(np.asarray(done).all()):
+        written[vids] = steps
+
+        done_h = np.asarray(c.done)
+        retiring = valid & (done_h | (steps >= max_iters))
+        if retiring.any():
+            rids = ids[retiring]
+            out_phi_e[rids] = np.asarray(c.phi.e)[retiring]
+            out_phi_c[rids] = np.asarray(c.phi.c)[retiring]
+            out_cost[rids] = np.asarray(c.cost)[retiring]
+            out_res[rids] = np.asarray(c.residual)[retiring]
+            out_iters[rids] = np.asarray(c.iters)[retiring]
+
+        active = valid & ~done_h
+        n_act = int(active.sum())
+        if n_act == 0:
             break
+        if compact:
+            bucket = batch_mod.next_pow2(n_act)
+            if bucket < len(ids):
+                keep = np.flatnonzero(active)
+                sel = np.concatenate(
+                    [keep, np.full(bucket - n_act, keep[0], np.int64)])
+                sel_j = jnp.asarray(sel)
+                inst_p = gp._gather(inst_p, sel_j)
+                c = gp._gather(c, sel_j)
+                if ae_p is not None:
+                    ae_p = ae_p[sel_j]
+                if ac_p is not None:
+                    ac_p = ac_p[sel_j]
+                pad = jnp.arange(bucket) >= n_act
+                c = c._replace(done=c.done | pad)
+                ids = np.where(np.arange(bucket) < n_act, ids[sel], -1)
 
-    # dense-history contract: repeat converged values past the last chunk
-    cost_hist[:, steps + 1:] = cost_hist[:, steps: steps + 1]
-    if steps > 0:
-        res_hist[:, steps:] = res_hist[:, steps - 1: steps]
+    # dense-history contract: repeat converged values past each member's
+    # retirement chunk
+    for m in range(B):
+        w = int(written[m])
+        cost_hist[m, w + 1:] = cost_hist[m, w]
+        if w > 0:
+            res_hist[m, w:] = res_hist[m, w - 1]
 
-    phi = Phi(e=jnp.asarray(np.asarray(c.phi.e)[:, :A_orig]),
-              c=jnp.asarray(np.asarray(c.phi.c)[:, :A_orig]))
     return gp.GPScan(
-        phi=phi, cost=c.cost, residual=c.residual,
+        phi=Phi(e=jnp.asarray(out_phi_e[:, :A_orig]),
+                c=jnp.asarray(out_phi_c[:, :A_orig])),
+        cost=jnp.asarray(out_cost), residual=jnp.asarray(out_res),
         cost_history=jnp.asarray(cost_hist),
         residual_history=jnp.asarray(res_hist),
-        iterations=c.iters,
+        iterations=jnp.asarray(out_iters),
     )
 
 
@@ -282,6 +426,7 @@ def solve_sharded(
     mesh: Mesh,
     *,
     axis: str = "stage",
+    node_axis: str | None = None,
     alpha: float = 0.02,
     max_iters: int = 300,
     tol: float = 1e-4,
@@ -300,12 +445,14 @@ def solve_sharded(
     engine ``gp.solve`` runs, traced under ``shard_map`` with the F/G
     measurement psum-reduced over ``axis`` — cost trajectories match the
     single-device solve (tests/test_distributed.py asserts ≤1e-4 over
-    ≥2 shards).  Returns a trimmed :class:`gp.GPResult`.
+    ≥2 shards).  ``node_axis`` selects the 2-D app × node-space mesh
+    (DESIGN.md §18; tests/test_sparse.py asserts 2-D == single-device).
+    Returns a trimmed :class:`gp.GPResult`.
     """
     lift = lambda t: jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], t)
     scan = solve_sharded_batched(
-        lift(inst), mesh, axis=axis, alpha=alpha, max_iters=max_iters,
-        tol=tol, patience=patience,
+        lift(inst), mesh, axis=axis, node_axis=node_axis, alpha=alpha,
+        max_iters=max_iters, tol=tol, patience=patience,
         phi0=None if phi0 is None else lift(phi0),
         allowed_e=None if allowed_e is None else lift(allowed_e),
         allowed_c=None if allowed_c is None else lift(allowed_c),

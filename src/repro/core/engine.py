@@ -174,8 +174,63 @@ def _pmax(x: jnp.ndarray, axis: Optional[str]) -> jnp.ndarray:
 # Blocked node sets
 # ---------------------------------------------------------------------------
 
+# Node count above which "bitset" auto-upgrades to the padded-neighbor-list
+# tagged sweep when the instance carries a sparse topology.  The two are
+# bit-equal (the sweep is the same monotone fixed point); the neighbor form
+# does O(E) work per round instead of O(V^2), which is what matters at metro
+# scale.  Matches traffic.SPARSE_MIN_V in spirit but kept separate — the
+# tagged sweep's crossover is independent of the stage-solver crossover.
+_NBR_AUTO_MIN_V = 128
+
+
+def _tagged_nbr_sharded(route: jnp.ndarray, improper: jnp.ndarray,
+                        nbr: jnp.ndarray, mask: jnp.ndarray,
+                        node_axis: str, node_shards: int) -> jnp.ndarray:
+    """Node-parallel tagged sweep: each node shard owns a V/n row slab.
+
+    The category-3 fixed point tagged[p] = ∃d: route[p,d] & (improper[p,d]
+    | tagged[nbr[p,d]]) reads arbitrary *columns* (successor nodes) but
+    writes only its own rows, so under a node-space mesh axis each shard
+    sweeps its contiguous row slab (O(E/n) per round) and the slabs are
+    re-assembled with one ``all_gather`` of the (A,K1,V) boolean frontier
+    per round — the §18 2-D-mesh realization of the paper's node-parallel
+    broadcast.  Monotone fixed point ⇒ bit-equal to the dense/replicated
+    sweeps; the exact-settle loop exits at the shared fixed point.
+    """
+    V = route.shape[-1]
+    rl = V // node_shards
+    i0 = jax.lax.axis_index(node_axis) * rl
+    route_l = jax.lax.dynamic_slice_in_dim(route, i0, rl, axis=-2)
+    imp_l = jax.lax.dynamic_slice_in_dim(improper, i0, rl, axis=-2)
+    nbr_l = jax.lax.dynamic_slice_in_dim(nbr, i0, rl, axis=0)
+    mask_l = jax.lax.dynamic_slice_in_dim(mask, i0, rl, axis=0)
+    idx = jnp.broadcast_to(nbr_l, route_l.shape[:-1] + nbr_l.shape[-1:])
+    rv = jnp.take_along_axis(route_l, idx, axis=-1) & mask_l
+    iv = jnp.take_along_axis(imp_l, idx, axis=-1)
+    seed_l = jnp.any(rv & iv, axis=-1)                       # (A,K1,rl)
+
+    def sweep(t):
+        tl = seed_l | jnp.any(rv & t[..., nbr_l], axis=-1)
+        return jax.lax.all_gather(tl, node_axis, axis=-1, tiled=True)
+
+    def cond(c):
+        i, t, prev = c
+        return jnp.any(t != prev) & (i < V + 1)
+
+    def body(c):
+        i, t, _ = c
+        return i + 1, sweep(t), t
+
+    t0 = jax.lax.all_gather(seed_l, node_axis, axis=-1, tiled=True)
+    _, t, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), t0, jnp.zeros_like(t0) | True))
+    return t
+
+
 def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray,
-                 method: str = "bitset") -> jnp.ndarray:
+                 method: str = "bitset", *,
+                 node_axis: Optional[str] = None,
+                 node_shards: int = 1) -> jnp.ndarray:
     """(A,K1,V,V) bool: j in B_i(a,k).
 
     j is blocked for i at stage (a,k) if (Section IV "Blocked node set"):
@@ -188,9 +243,13 @@ def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray,
     routing DAG.  method="bitset" (default) runs it through the bit-packed
     kernel — uint32-packed successor words, while-loop frontier early exit
     at the DAG diameter (kernels/blocked_sets.py, DESIGN.md §13);
-    method="scan" keeps the seed's dense V-sweep ``lax.scan`` as the
-    differential reference (tests/test_blocked_sets.py asserts bit-exact
-    agreement — the early exit stops precisely at the shared fixed point).
+    method="nbr" gathers along the instance's padded out-neighbor lists so
+    each round costs O(E) (requires ``inst.has_sparse``; DESIGN.md §18) —
+    "bitset" auto-upgrades to it at V >= 128 when the topology is attached,
+    since the two are bit-equal; method="scan" keeps the seed's dense
+    V-sweep ``lax.scan`` as the differential reference
+    (tests/test_blocked_sets.py asserts bit-exact agreement — the early
+    exit stops precisely at the shared fixed point).
 
     Entirely local to an application shard: the routing DAG of stage (a,k)
     never couples applications, so the mesh path calls this unchanged.
@@ -199,7 +258,19 @@ def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray,
     worse = pdt[:, :, None, :] > pdt[:, :, :, None] + BLOCK_EPS  # pdt_q > pdt_p
     improper = route & worse
 
-    if method == "bitset":
+    if (method == "bitset" and inst.has_sparse
+            and inst.V >= _NBR_AUTO_MIN_V):
+        method = "nbr"
+    if method == "nbr":
+        if (node_axis is not None and node_shards > 1
+                and inst.V % node_shards == 0):
+            tagged = _tagged_nbr_sharded(route, improper, inst.out_nbr,
+                                         inst.out_mask, node_axis,
+                                         node_shards)
+        else:
+            tagged = ops.blocked_tagged_nbr(route, improper,
+                                            inst.out_nbr, inst.out_mask)
+    elif method == "bitset":
         tagged = ops.blocked_tagged(route, improper)
     else:
         tagged = blocked_sets_mod.tagged_scan_dense(route, improper)
@@ -240,10 +311,18 @@ def gp_step(
     *,
     blocked: str = "bitset",
     axis: Optional[str] = None,
+    node_axis: Optional[str] = None,
+    node_shards: int = 1,
     accel: Optional[AccelConfig] = None,
     app_mask: Optional[jnp.ndarray] = None,
 ) -> GPState:
     """One fused GP iteration; ``axis`` selects the F/G reduction (above).
+
+    ``node_axis``/``node_shards`` name the second (node-space) mesh axis of
+    the 2-D mesh (DESIGN.md §18): when set, the blocked-set tagged sweep
+    runs node-parallel over row slabs (``_tagged_nbr_sharded``); all other
+    per-iteration compute is replicated across the node shards, so the
+    iteration stays bit-equal to the 1-D mesh and single-device paths.
 
     ``app_mask`` ((A,) bool, optional) freezes applications: where False,
     the committed strategy rows are the *incoming* ``phi`` rows regardless
@@ -261,16 +340,19 @@ def gp_step(
     # One batched LU of every (app, stage) system per iteration: the traffic
     # sweep solves the transposed systems and the marginal recursion the
     # plain ones from the SAME factors (traffic.stage_factors, DESIGN.md
-    # §12).  The ladder's candidate evaluations below factor their own
-    # (ladder, A, K1)-stacked batch inside the vmap.  "auto" resolves per
-    # backend/size at trace time (traffic.resolve_solver).
-    solver = traffic_mod.resolve_solver(solver, inst.V)
+    # §12).  The sparse path is factorization-free — both sweeps run the
+    # neighbor-list fixed point directly (§18).  The ladder's candidate
+    # evaluations below factor their own (ladder, A, K1)-stacked batch
+    # inside the vmap.  "auto" resolves per backend/size/topology at trace
+    # time (traffic.resolve_solver).
+    solver = traffic_mod.resolve_solver(solver, inst.V, inst)
     fact = traffic_mod.stage_factors(phi.e) if solver == "batched_lu" else None
     fl = flows(inst, phi, fact, solver=solver, axis=axis)
     m = marginals(inst, phi, fl, fact, solver=solver)
 
-    avail_e = inst.adj[None, None] & ~blocked_sets(inst, phi, m.pdt,
-                                                   method=blocked)
+    avail_e = inst.adj[None, None] & ~blocked_sets(
+        inst, phi, m.pdt, method=blocked,
+        node_axis=node_axis, node_shards=node_shards)
     if allowed_e is not None:
         avail_e = avail_e & allowed_e
     avail_c = inst.cpu_allowed()[:, :, None]
@@ -516,6 +598,8 @@ def scan_chunk(
     solver: str = "auto",
     blocked: str = "bitset",
     axis: Optional[str] = None,
+    node_axis: Optional[str] = None,
+    node_shards: int = 1,
     accel: Optional[AccelConfig] = None,
     app_mask: Optional[jnp.ndarray] = None,
 ):
@@ -554,8 +638,9 @@ def scan_chunk(
         else:
             alpha_eff = alpha
         state = gp_step(inst, c.phi, alpha_eff, allowed_e, allowed_c, scaled,
-                        solver, blocked=blocked, axis=axis, accel=accel,
-                        app_mask=app_mask)
+                        solver, blocked=blocked, axis=axis,
+                        node_axis=node_axis, node_shards=node_shards,
+                        accel=accel, app_mask=app_mask)
 
         new_phi, new_cost = state.phi, state.cost
         ax, af, ak = c.ax, c.af, c.ak

@@ -66,15 +66,13 @@ def pdt_recursion(
     the whole reverse recursion as ONE fused chain-substitution call
     (``ops.fused_chain_solve``, DESIGN.md §13).
     """
-    solver = resolve_solver(solver, phi.e.shape[-1])
-    if solver != "batched_lu":
+    solver = resolve_solver(solver, phi.e.shape[-1], inst)
+    if solver not in ("batched_lu", "sparse"):
         return jax.vmap(
             lambda pe, pc, L_a, w_a: _per_app_dense(inst, Dp, Cp, pe, pc, L_a, w_a)
         )(phi.e, phi.c, inst.L, inst.w)
 
-    if fact is None:
-        fact = stage_factors(phi.e)
-    # One fused call consumes the whole (A, K1, V, V) factor stack, walking
+    # One fused call consumes the whole (A, K1, V, V) stage stack, walking
     # k in reverse: pdt_k = (I - Phi_k)^-1 (base_k + phi_c_k * pdt_{k+1})
     # with base_k = [link term] + phi_c_k * w_k * wnode * C' and the
     # nonnegativity clamp applied inside the fused sweep.
@@ -83,6 +81,12 @@ def pdt_recursion(
     )  # (A, K1, V): sum_j phi_ij L_k D'_ij
     base = link_term + phi.c * (
         inst.w[:, :, None] * inst.wnode[None, None] * Cp[None, None])
+    if solver == "sparse":
+        return ops.sparse_chain_solve(
+            ops.sparse_topo(inst), phi.e, base, phi.c, trans=0,
+            reverse=True, clamp=True)
+    if fact is None:
+        fact = stage_factors(phi.e)
     return ops.fused_chain_solve(fact, base, phi.c, trans=0, reverse=True,
                                  clamp=True)
 

@@ -14,7 +14,16 @@ A :class:`Instance` bundles everything problem (2) needs:
 
 Everything is stored as dense JAX arrays so the optimization core can be
 jitted / vmapped / shard_mapped.  Networks in the paper are small
-(|V| <= 100), so dense (V,V) representations are the right trade-off.
+(|V| <= 100), so dense (V,V) representations are the right trade-off there.
+
+Metro-scale instances (V >= several hundred) additionally carry a *sparse
+topology* (DESIGN.md §18): padded per-node in/out neighbor lists (real
+topologies have O(V) edges, so max-degree padding wastes little), a BFS
+graph partition into routing blocks, and the block-level neighbor lists of
+the blocked (BSR-style) stage systems.  ``with_sparse`` attaches these as
+optional pytree fields; every dense code path ignores them, and the sparse
+stage solver (``kernels/sparse_solve.py``), the neighbor-list blocked-set
+sweep and the 2-D mesh driver consume them when present.
 """
 
 from __future__ import annotations
@@ -60,6 +69,18 @@ class Instance:
     dst: jnp.ndarray            # (A,) int destination node d_a
     n_tasks: jnp.ndarray        # (A,) int |T_a|
     stage_mask: jnp.ndarray     # (A, K1) bool, valid stages k <= |T_a|
+    # --- sparse topology (optional, attached by ``with_sparse``; §18) ---
+    # Padded neighbor lists: row i lists its out-/in-neighbors in columns
+    # 0..deg-1; masked columns point at i itself (a safe gather target).
+    out_nbr: Optional[jnp.ndarray] = None    # (V, D) int32
+    out_mask: Optional[jnp.ndarray] = None   # (V, D) bool
+    in_nbr: Optional[jnp.ndarray] = None     # (V, D) int32
+    in_mask: Optional[jnp.ndarray] = None    # (V, D) bool
+    node_part: Optional[jnp.ndarray] = None  # (V,) int32 BFS routing-block id
+    # Block-level neighbor lists of the SPARSE_BLOCK x SPARSE_BLOCK blocked
+    # stage systems (symmetrized, so one structure serves Phi and Phi^T).
+    blk_nbr: Optional[jnp.ndarray] = None    # (NB, BD) int32
+    blk_mask: Optional[jnp.ndarray] = None   # (NB, BD) bool
 
     @property
     def V(self) -> int:
@@ -72,6 +93,16 @@ class Instance:
     @property
     def K1(self) -> int:
         return int(self.L.shape[1])
+
+    @property
+    def has_sparse(self) -> bool:
+        """Whether the sparse-topology fields are attached (``with_sparse``)."""
+        return self.out_nbr is not None
+
+    @property
+    def max_degree(self) -> int:
+        """Neighbor-list pad width D (0 when no sparse topology attached)."""
+        return int(self.out_nbr.shape[-1]) if self.has_sparse else 0
 
     def degenerate_mask(self) -> jnp.ndarray:
         """(A, K1, V) bool — True where phi must sum to 0 (eq. (1) lower branch).
@@ -101,6 +132,10 @@ jax.tree_util.register_dataclass(
     data_fields=[
         "adj", "link_param", "comp_param", "L", "w", "wnode", "r", "dst",
         "n_tasks", "stage_mask",
+        # optional sparse topology (None = absent; None is an empty pytree
+        # subtree, so dense-only instances keep their historical structure)
+        "out_nbr", "out_mask", "in_nbr", "in_mask", "node_part",
+        "blk_nbr", "blk_mask",
     ],
     meta_fields=["link_kind", "comp_kind"],
 )
@@ -210,22 +245,56 @@ def geant(seed: int = 11) -> np.ndarray:
     return _to_directed_arrays(g)
 
 
-def small_world(n: int = 100, seed: int = 3) -> np.ndarray:
-    """SW: ring-like graph with short- and long-range edges, 100/320."""
+def small_world(n: int = 100, seed: int = 3,
+                n_long: Optional[int] = None) -> np.ndarray:
+    """SW: ring-like graph with short- and long-range edges.
+
+    At the Table II defaults (n=100, seed=3) this is exactly the paper's
+    100-node / 320-edge topology.  Other ``n`` give the same construction
+    scaled — ring + i+2/i+3 short-range chords + ``n_long`` (default n/5)
+    random long-range chords — which is the metro-scale "small-world" family
+    of the ``gp_scaling`` V >= 300 leg.  Node labels follow the ring, so
+    contiguous index blocks are graph-local (the §18 partition relies on
+    this).
+    """
     g = nx.Graph()
     g.add_nodes_from(range(n))
     for i in range(n):
-        g.add_edge(i, (i + 1) % n)              # ring, 100
-        g.add_edge(i, (i + 2) % n)              # short-range, 100
-        g.add_edge(i, (i + 3) % n)              # short-range, 100
+        g.add_edge(i, (i + 1) % n)              # ring
+        g.add_edge(i, (i + 2) % n)              # short-range
+        g.add_edge(i, (i + 3) % n)              # short-range
+    if n_long is None:
+        n_long = n // 5
     rng = np.random.default_rng(seed)
     added = 0
-    while added < 20:                            # long-range, 20 -> 320 total
+    while added < n_long:                        # long-range chords
         u, v = rng.integers(0, n, size=2)
         if u != v and not g.has_edge(u, v):
             g.add_edge(u, v)
             added += 1
-    assert g.number_of_nodes() == 100 and g.number_of_edges() == 320
+    if n == 100 and n_long == 20:
+        assert g.number_of_nodes() == 100 and g.number_of_edges() == 320
+    return _to_directed_arrays(g)
+
+
+def metro_geant(n: int = 300, seed: int = 11) -> np.ndarray:
+    """GEANT-like ring + chords construction scaled to metro node counts.
+
+    Same shape as :func:`geant` (backbone ring + n/2 chords, average degree
+    3) at arbitrary ``n``; deterministic for a given seed.  Ring labeling
+    keeps contiguous index blocks graph-local, like :func:`small_world`.
+    """
+    g = nx.Graph()
+    g.add_nodes_from(range(n))
+    for i in range(n):
+        g.add_edge(i, (i + 1) % n)              # backbone ring, n
+    rng = np.random.default_rng(seed)
+    added = 0
+    while added < n // 2:                        # chords, n/2
+        u, v = rng.integers(0, n, size=2)
+        if u != v and not g.has_edge(u, v):
+            g.add_edge(u, v)
+            added += 1
     return _to_directed_arrays(g)
 
 
@@ -238,6 +307,139 @@ TOPOLOGIES = {
     "geant": geant,
     "sw": small_world,
 }
+
+
+# ---------------------------------------------------------------------------
+# Sparse topology (padded neighbor lists + graph partition — DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+# Edge length of the blocked (BSR-style) stage-system blocks: nodes are
+# grouped into ceil(V / SPARSE_BLOCK) contiguous index blocks, and the
+# blocked kernels iterate only block pairs with at least one edge.  The
+# value lives in kernels/sparse_solve.py (the kernel and the block-gather
+# must agree); re-exported here for the topology builders.
+from repro.kernels.sparse_solve import SPARSE_BLOCK  # noqa: E402
+
+
+def sparse_neighbors(adj: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Padded neighbor lists of a dense adjacency.
+
+    Returns ``(out_nbr, out_mask, in_nbr, in_mask)``, each ``(V, D)`` with
+    ``D = max(1, max total degree)``: row ``i`` lists its out-(in-)neighbors
+    in the leading columns; masked columns point at ``i`` itself so gathers
+    through them are always in-bounds (and zeroed by the mask).
+    """
+    adj = np.asarray(adj, dtype=bool)
+    V = adj.shape[0]
+    D = max(1, int(max(adj.sum(1).max(initial=0), adj.sum(0).max(initial=0))))
+    out_nbr = np.tile(np.arange(V, dtype=np.int32)[:, None], (1, D))
+    in_nbr = out_nbr.copy()
+    out_mask = np.zeros((V, D), dtype=bool)
+    in_mask = np.zeros((V, D), dtype=bool)
+    for i in range(V):
+        js = np.nonzero(adj[i])[0]
+        out_nbr[i, : len(js)] = js
+        out_mask[i, : len(js)] = True
+        js = np.nonzero(adj[:, i])[0]
+        in_nbr[i, : len(js)] = js
+        in_mask[i, : len(js)] = True
+    return out_nbr, out_mask, in_nbr, in_mask
+
+
+def graph_partition(adj: np.ndarray, block: int = SPARSE_BLOCK) -> np.ndarray:
+    """(V,) int32 routing-block labels: BFS order packed into size-``block``
+    groups.
+
+    BFS discovery order keeps each block a connected neighborhood, so for
+    the ring-labeled metro builders the labels coincide with contiguous
+    index blocks ``i // block`` — the layout the blocked kernels and the
+    node-space mesh axis shard along.  The labels are diagnostic metadata
+    (roofline accounting, partition-quality checks); the kernels themselves
+    block over contiguous index ranges.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    V = adj.shape[0]
+    seen = np.zeros(V, dtype=bool)
+    order = []
+    for s in range(V):
+        if seen[s]:
+            continue
+        seen[s] = True
+        queue = [s]
+        while queue:
+            u = queue.pop(0)
+            order.append(u)
+            for v in np.nonzero(adj[u])[0]:
+                if not seen[v]:
+                    seen[v] = True
+                    queue.append(int(v))
+    part = np.empty(V, dtype=np.int32)
+    part[np.asarray(order)] = np.arange(V, dtype=np.int32) // block
+    return part
+
+
+def block_neighbors(adj: np.ndarray, block: int = SPARSE_BLOCK
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Block-level neighbor lists of the partition-blocked stage systems.
+
+    Nodes are grouped into ``NB = ceil(V / block)`` contiguous index blocks;
+    block pair (I, J) is a neighbor iff any edge (in either direction —
+    symmetrized so one structure serves both ``Phi`` and ``Phi^T``) touches
+    the (I, J) submatrix.  Returns ``(blk_nbr, blk_mask)``, each ``(NB, BD)``
+    with ``BD = max block degree``; masked columns point at ``I`` itself.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    V = adj.shape[0]
+    NB = -(-V // block)
+    Vp = NB * block
+    ap = np.zeros((Vp, Vp), dtype=bool)
+    ap[:V, :V] = adj
+    bad = ap.reshape(NB, block, NB, block).any(axis=(1, 3))
+    bad = bad | bad.T
+    BD = max(1, int(bad.sum(1).max(initial=0)))
+    blk_nbr = np.tile(np.arange(NB, dtype=np.int32)[:, None], (1, BD))
+    blk_mask = np.zeros((NB, BD), dtype=bool)
+    for i in range(NB):
+        js = np.nonzero(bad[i])[0]
+        blk_nbr[i, : len(js)] = js
+        blk_mask[i, : len(js)] = True
+    return blk_nbr, blk_mask
+
+
+def with_sparse(inst: Instance, *, block: int = SPARSE_BLOCK) -> Instance:
+    """Attach the sparse topology fields to an instance (host-side, numpy).
+
+    The returned instance is numerically identical to ``inst`` everywhere —
+    the dense arrays are untouched; the sparse fields ride along as extra
+    pytree leaves that the sparse stage solver, the neighbor-list blocked-set
+    sweep and the 2-D mesh driver pick up (DESIGN.md §18).  Must be called
+    outside jit (the neighbor extraction is data-dependent).
+    """
+    adj = np.asarray(inst.adj)
+    out_nbr, out_mask, in_nbr, in_mask = sparse_neighbors(adj)
+    part = graph_partition(adj, block=block)
+    blk_nbr, blk_mask = block_neighbors(adj, block=block)
+    return dataclasses.replace(
+        inst,
+        out_nbr=jnp.asarray(out_nbr), out_mask=jnp.asarray(out_mask),
+        in_nbr=jnp.asarray(in_nbr), in_mask=jnp.asarray(in_mask),
+        node_part=jnp.asarray(part),
+        blk_nbr=jnp.asarray(blk_nbr), blk_mask=jnp.asarray(blk_mask),
+    )
+
+
+def without_sparse(inst: Instance) -> Instance:
+    """Strip the sparse topology fields (the explicit dense fallback)."""
+    return dataclasses.replace(
+        inst, out_nbr=None, out_mask=None, in_nbr=None, in_mask=None,
+        node_part=None, blk_nbr=None, blk_mask=None,
+    )
+
+
+def n_edges(inst: Instance) -> int:
+    """Directed edge count |E| (host-side)."""
+    return int(np.asarray(inst.adj).sum())
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +527,28 @@ TABLE_II = {
     "sw-queue": ("sw", 30, 8, QUEUE, 20.0, QUEUE, 20.0),
     "sw-linear": ("sw", 30, 8, LINEAR, 20.0, LINEAR, 20.0),
 }
+
+
+def metro_instance(topo: str, V: int, *, n_apps: int = 3, seed: int = 0,
+                   sparse: bool = True) -> Instance:
+    """A metro-scale instance on a V-node sparse graph (DESIGN.md §18).
+
+    ``topo`` is ``"sw"`` (scaled :func:`small_world`) or ``"geant"``
+    (scaled :func:`metro_geant`).  Parameters follow the Table II sw-queue
+    scenario; ``sparse=True`` (default) attaches the sparse topology, which
+    is the only viable solve path at V >= several hundred.
+    """
+    if topo == "sw":
+        adj = small_world(V, seed=3)
+    elif topo == "geant":
+        adj = metro_geant(V, seed=11)
+    else:
+        raise ValueError(f"unknown metro topology {topo!r} (want 'sw'/'geant')")
+    inst = build_instance(
+        adj, n_apps=n_apps, n_tasks=2, n_sources=3,
+        link_mean=20.0, comp_mean=20.0, seed=seed,
+    )
+    return with_sparse(inst) if sparse else inst
 
 
 def table_ii_instance(name: str, seed: int = 0, rate_scale: float = 1.0) -> Instance:

@@ -68,7 +68,8 @@ def _solve_stage(phi_e_k: jnp.ndarray, inject: jnp.ndarray) -> jnp.ndarray:
 _AUTO_MIN_V_FALLBACK = 48
 
 
-def _derive_auto_min_v(rows: Optional[list] = None) -> int:
+def _derive_auto_min_v(rows: Optional[list] = None,
+                       backend: Optional[str] = None) -> int:
     """Dense-vs-batched crossover V, derived from committed bench rows.
 
     Reads the repo's BENCH_gp.json ``gp_scaling``/``batched_lu`` rows
@@ -76,14 +77,22 @@ def _derive_auto_min_v(rows: Optional[list] = None) -> int:
     and linearly interpolates the V where the speedup crosses 1.0.  The
     committed measurements put the crossover well below the old hardcoded
     48 (0.95x already at V=22), so deriving it here fixes the small-V
-    dispatch regression without baking in another magic constant.  Any
-    failure — file missing (installed package), rows absent, no crossing
-    bracketed — falls back to :data:`_AUTO_MIN_V_FALLBACK`.  ``rows``
-    injects a row list directly (tests); default None reads the file.
+    dispatch regression without baking in another magic constant.
+
+    The crossover is *per backend*: rows carry a ``backend`` key (rows
+    recorded before the key existed count as ``"cpu"``), and only rows
+    measured on the current backend (default ``jax.default_backend()``)
+    enter the interpolation — a CPU-measured crossover says nothing about
+    GPU/TPU dispatch.  Any failure — file missing (installed package), no
+    rows for this backend, no crossing bracketed — falls back to
+    :data:`_AUTO_MIN_V_FALLBACK`.  ``rows`` injects a row list directly
+    (tests); default None reads the file.
     """
     import json
     import os
 
+    if backend is None:
+        backend = jax.default_backend()
     if rows is None:
         path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "..", "..", "..", "BENCH_gp.json")
@@ -97,6 +106,7 @@ def _derive_auto_min_v(rows: Optional[list] = None) -> int:
          for r in rows
          if r.get("bench") == "gp_scaling"
          and r.get("solver") == "batched_lu"
+         and r.get("backend", "cpu") == backend
          and "V" in r and "speedup" in r}.items())
     if len(pts) < 2:
         return _AUTO_MIN_V_FALLBACK
@@ -111,15 +121,30 @@ def _derive_auto_min_v(rows: Optional[list] = None) -> int:
 
 AUTO_MIN_V = _derive_auto_min_v()
 
+# Minimum node count for "auto" to prefer the sparse fixed-point solver when
+# an instance carries a sparse topology (network.with_sparse).  Below this
+# the dense paths win — the sweeps are dispatch-bound and the V^3/V^2 work
+# they avoid is small; at metro scale (V >= several hundred at O(V) edges)
+# the sparse path is the only viable one (DESIGN.md §18).  Parity tests
+# force solver="sparse" explicitly, so the threshold only steers "auto".
+SPARSE_MIN_V = 128
 
-def resolve_solver(solver: str, V: int) -> str:
+
+def resolve_solver(solver: str, V: int, inst: Optional[Instance] = None
+                   ) -> str:
     """Resolve the "auto" stage-solver policy to a concrete method.
 
-    V is a static (shape-derived) quantity, so the choice is made at trace
-    time and each jitted program contains exactly one solver path.
+    V is a static (shape-derived) quantity — and whether ``inst`` carries a
+    sparse topology is static pytree structure — so the choice is made at
+    trace time and each jitted program contains exactly one solver path.
+    "auto" resolves to "sparse" when the instance carries a sparse topology
+    and V >= :data:`SPARSE_MIN_V`; otherwise to "batched_lu"/"dense" by the
+    per-backend bench-derived crossover :data:`AUTO_MIN_V`.
     """
     if solver != "auto":
         return solver
+    if inst is not None and inst.has_sparse and V >= SPARSE_MIN_V:
+        return "sparse"
     return "batched_lu" if (not ops.INTERPRET or V >= AUTO_MIN_V) else "dense"
 
 
@@ -150,14 +175,14 @@ def stage_traffic(
 
     solver="batched_lu" consumes ``fact`` (or factors all stages in one
     batched LU) and runs O(V^2) triangular solves per scan step;
+    solver="sparse" runs the factorization-free neighbor-list fixed-point
+    sweeps (requires ``inst.has_sparse``; O(E) per sweep, DESIGN.md §18);
     solver="dense" is the seed's per-stage ``jnp.linalg.solve`` reference;
     solver="auto" (default) picks per backend/size (``resolve_solver``).
     """
-    solver = resolve_solver(solver, phi.e.shape[-1])
-    if solver == "batched_lu":
-        if fact is None:
-            fact = stage_factors(phi.e)
-        # One fused call consumes the whole (A, K1, V, V) factor stack:
+    solver = resolve_solver(solver, phi.e.shape[-1], inst)
+    if solver in ("batched_lu", "sparse"):
+        # One fused call consumes the whole (A, K1, V, V) stage stack:
         # t_k = (I - Phi_k)^-T (base_k + mult_k * t_{k-1}) with base_0 = r,
         # base_{k>0} = 0 and mult_k = phi_c_{k-1} (each computed packet of
         # stage k-1 injects one next-stage packet).  NOTE: no clamping — the
@@ -169,7 +194,13 @@ def stage_traffic(
             [inst.r[:, None, :], jnp.zeros_like(phi.c[:, 1:])], axis=1)
         mult = jnp.concatenate(
             [jnp.zeros_like(phi.c[:, :1]), phi.c[:, :-1]], axis=1)
-        t = ops.fused_chain_solve(fact, base, mult, trans=1)
+        if solver == "sparse":
+            t = ops.sparse_chain_solve(
+                ops.sparse_topo(inst), phi.e, base, mult, trans=1)
+        else:
+            if fact is None:
+                fact = stage_factors(phi.e)
+            t = ops.fused_chain_solve(fact, base, mult, trans=1)
         return t, t * phi.c
 
     def per_app(phi_e_a, phi_c_a, r_a):

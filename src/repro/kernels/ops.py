@@ -25,6 +25,7 @@ from repro.kernels import batched_solve as _bs
 from repro.kernels import blocked_sets as _bset
 from repro.kernels import chain_propagate as _cp
 from repro.kernels import flash_attention as _fa
+from repro.kernels import sparse_solve as _ss
 from repro.kernels import ssd_chunk as _sc
 
 INTERPRET = jax.default_backend() == "cpu"
@@ -240,6 +241,99 @@ def batched_solve(mats: jnp.ndarray, rhs: jnp.ndarray, *, trans: int = 0,
     rhs_flat, _ = _flatten_batch(rhs, 1)
     resid = _bs.residuals(mats_flat, x_flat, rhs_flat, trans=trans)
     return x, resid.reshape(lead)
+
+
+# ---------------------------------------------------------------------------
+# Sparse stage solves on padded neighbor lists (kernels/sparse_solve.py, §18)
+# ---------------------------------------------------------------------------
+
+class SparseTopo(NamedTuple):
+    """The sparse-topology arrays of an Instance, as one hashable-shape
+    bundle the sparse kernels consume (``network.with_sparse`` attaches the
+    fields; ``sparse_topo`` extracts them).
+
+    out_nbr/out_mask, in_nbr/in_mask: (V, D) padded neighbor lists
+    blk_nbr/blk_mask: (NB, BD) block-level neighbor lists (BSR structure)
+    """
+
+    out_nbr: jnp.ndarray
+    out_mask: jnp.ndarray
+    in_nbr: jnp.ndarray
+    in_mask: jnp.ndarray
+    blk_nbr: jnp.ndarray
+    blk_mask: jnp.ndarray
+
+
+def sparse_topo(inst) -> SparseTopo:
+    """Extract the SparseTopo bundle of an instance (raises if absent)."""
+    if inst.out_nbr is None:
+        raise ValueError(
+            "instance carries no sparse topology; attach one with "
+            "network.with_sparse(inst) before solver='sparse'")
+    return SparseTopo(out_nbr=inst.out_nbr, out_mask=inst.out_mask,
+                      in_nbr=inst.in_nbr, in_mask=inst.in_mask,
+                      blk_nbr=inst.blk_nbr, blk_mask=inst.blk_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("trans", "reverse", "clamp",
+                                              "use_pallas"))
+def sparse_chain_solve(topo: SparseTopo, phi_e: jnp.ndarray,
+                       base: jnp.ndarray, mult: jnp.ndarray, *,
+                       trans: int = 0, reverse: bool = False,
+                       clamp: bool = False,
+                       use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Sparse drop-in for ``fused_chain_solve``: solve the whole stage chain
+
+        x_k = (I - M_k)^{-1} (base_k + mult_k * x_prev),
+        M_k = Phi_k (trans=0) or Phi_k^T (trans=1),
+
+    by O(E)-per-sweep fixed-point iteration on the padded neighbor lists —
+    exact for loop-free (nilpotent) strategies, divergent (and rejected by
+    ``traffic_is_valid``) for loopy candidates, mirroring the dense
+    contract (kernels/sparse_solve.py).
+
+    phi_e (..., K, V, V), base/mult (..., K, V) -> x (..., K, V).  No
+    factorization object: the topology bundle replaces ``BatchedLU``.  The
+    Pallas path (TPU default, interpret on request) runs the
+    partition-blocked BSR kernel over the nonzero blocks only; the jnp path
+    gathers per-edge values.  Collective-free and per-member, like every
+    wrapper here (shard_map safe).
+    """
+    phi_flat, lead = _flatten_batch(phi_e, 3)          # (Bf, K, V, V)
+    base_flat, _ = _flatten_batch(base, 2)
+    mult_flat, _ = _flatten_batch(mult, 2)
+    if _use_pallas(use_pallas):
+        M = phi_flat if trans == 0 else jnp.swapaxes(phi_flat, -1, -2)
+        bvals = _ss.block_values(M, topo.blk_nbr, topo.blk_mask,
+                                 _ss.SPARSE_BLOCK)
+        x = _ss.chain_solve_bsr(bvals, topo.blk_nbr, base_flat, mult_flat,
+                                reverse=reverse, clamp=clamp,
+                                interpret=INTERPRET)
+    else:
+        nbr, mask = ((topo.out_nbr, topo.out_mask) if trans == 0
+                     else (topo.in_nbr, topo.in_mask))
+        vals = _ss.neighbor_values(phi_flat, nbr, mask, trans=trans)
+        x = _ss.chain_solve_nbr(vals, nbr, base_flat, mult_flat,
+                                reverse=reverse, clamp=clamp)
+    return x.reshape(base.shape)
+
+
+@jax.jit
+def blocked_tagged_nbr(route: jnp.ndarray, improper: jnp.ndarray,
+                       nbr: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Neighbor-list variant of ``blocked_tagged``: O(E) per round.
+
+    route/improper (..., V, V) bool, nbr/mask (V, D) -> tagged (..., V)
+    bool, bit-equal to ``blocked_tagged`` and the dense scan (the fixed
+    point is the same monotone map; see kernels/sparse_solve.py).
+    """
+    flat, lead = _flatten_batch(route, 2)
+    V = flat.shape[-1]
+    idx = jnp.broadcast_to(nbr, flat.shape[:-1] + nbr.shape[-1:])
+    rv = jnp.take_along_axis(flat, idx, axis=-1) & mask
+    iv = jnp.take_along_axis(improper.reshape(flat.shape), idx, axis=-1)
+    tagged = _ss.tagged_nbr(rv, iv, nbr)
+    return tagged.reshape(lead + (V,))
 
 
 # ---------------------------------------------------------------------------

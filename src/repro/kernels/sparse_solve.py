@@ -1,0 +1,285 @@
+"""Sparse stage-system solves on padded neighbor lists (DESIGN.md §18).
+
+The GP stage systems are ``(I - Phi_k^T) t = b`` (traffic, trans=1) and
+``(I - Phi_k) pdt = b`` (marginals, trans=0).  For loop-free strategies
+``Phi_k`` restricted to its support is *nilpotent* — routing follows a DAG —
+so the Neumann series terminates and the fixed-point sweep
+
+    x <- b + M x,        M = Phi_k (trans=0) or Phi_k^T (trans=1)
+
+converges EXACTLY after (DAG depth + 1) sweeps: once every dependency of a
+node has settled, recomputing its value is bit-deterministic, so the
+``x != prev`` early exit stops precisely at the fixed point (the same
+argument as the bitset sweep's monotone early exit, DESIGN.md §13).  Loopy
+candidate strategies make the sweep diverge — values blow past the
+``traffic_is_valid`` bound (or are frozen at +inf by the divergence latch)
+and the candidate is rejected, exactly like the dense path's singular-solve
+contract.
+
+Each sweep costs O(E) instead of the dense path's O(V^2) substitution (and
+no O(V^3) factorization at all), which is what makes metro-scale graphs
+(V >= several hundred at O(V) edges) viable.
+
+Two executable paths, dispatched by ``kernels.ops.sparse_chain_solve``:
+
+  * :func:`chain_solve_nbr`  — gather/scatter-free jnp sweeps on the padded
+    neighbor lists (``x[..., nbr]`` is one gather per sweep); CPU/GPU path.
+  * :func:`chain_solve_bsr`  — the partition-blocked Pallas kernel: the
+    stage matrices are gathered into BSR-style ``(NB, BD, bs, bs)`` blocks
+    (``network.block_neighbors``) and the kernel iterates ONLY the nonzero
+    blocks — ``NB * BD`` dense ``bs x bs`` matmuls per sweep, MXU-shaped on
+    TPU (Mosaic; interpret mode for tests).
+
+Both compute the same linear map, so they agree to float tolerance; parity
+with the dense LU path on loop-free strategies is exact up to roundoff
+(tests/test_sparse.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Edge length of the partition blocks (``network.block_neighbors`` re-exports
+# this as ``network.SPARSE_BLOCK``): 32 matches both the bitset word width
+# and the TPU sublane tile.
+SPARSE_BLOCK = 32
+
+# Iterates beyond this magnitude are frozen at +inf: the lane has provably
+# diverged (every physical traffic/marginal is orders of magnitude smaller),
+# and freezing makes the while-loop exit instead of chasing a runaway
+# geometric series to the sweep cap.
+_DIVERGE = 1e12
+
+
+def neighbor_values(phi_e: jnp.ndarray, nbr: jnp.ndarray, mask: jnp.ndarray,
+                    *, trans: int) -> jnp.ndarray:
+    """Gather the sparse matrix entries aligned to the padded neighbor lists.
+
+    phi_e (..., V, V), nbr/mask (V, D) -> vals (..., V, D) with
+
+        trans=0:  vals[..., i, d] = phi_e[..., i, out_nbr[i, d]]
+        trans=1:  vals[..., j, d] = phi_e[..., in_nbr[j, d], j]
+
+    i.e. row p of ``vals`` holds the nonzero entries of row p of ``M``
+    (``M = Phi`` or ``Phi^T``), so the sweep ``b + sum_d vals * x[nbr]`` is
+    the sparse matvec ``b + M x``.  Masked columns are zeroed.
+    """
+    M = phi_e if trans == 0 else jnp.swapaxes(phi_e, -1, -2)
+    idx = jnp.broadcast_to(nbr, M.shape[:-1] + nbr.shape[-1:])
+    vals = jnp.take_along_axis(M, idx, axis=-1)
+    return jnp.where(mask, vals, 0.0)
+
+
+def _fixed_point(vals: jnp.ndarray, nbr: jnp.ndarray, b: jnp.ndarray,
+                 cap: int) -> jnp.ndarray:
+    """Solve x = b + M x by sweeps with an exact-settle early exit.
+
+    vals (..., V, D), nbr (V, D), b (..., V) -> x (..., V).  The loop exits
+    when no entry changed (exact for nilpotent M, see module docstring) or
+    after ``cap`` sweeps; diverging entries latch at +inf.
+    """
+    def sweep(x):
+        y = b + jnp.sum(vals * x[..., nbr], axis=-1)
+        bad = ~jnp.isfinite(y) | (jnp.abs(y) > _DIVERGE)
+        return jnp.where(bad, jnp.inf, y)
+
+    def cond(carry):
+        x, prev, i = carry
+        return jnp.any(x != prev) & (i < cap)
+
+    def body(carry):
+        x, _, i = carry
+        return sweep(x), x, i + 1
+
+    x0 = sweep(jnp.zeros_like(b))
+    prev0 = jnp.full_like(b, jnp.inf)
+    x, _, _ = jax.lax.while_loop(cond, body, (x0, prev0, jnp.int32(1)))
+    return x
+
+
+def chain_solve_nbr(vals: jnp.ndarray, nbr: jnp.ndarray,
+                    base: jnp.ndarray, mult: jnp.ndarray, *,
+                    reverse: bool = False, clamp: bool = False) -> jnp.ndarray:
+    """Fused chain of sparse stage solves (the neighbor-list jnp path).
+
+    vals (B, K, V, D) row-aligned stage matrices (``neighbor_values``),
+    nbr (V, D), base/mult (B, K, V) -> x (B, K, V) where, walking k forward
+    (or backward with ``reverse=True``),
+
+        x_k = (I - M_k)^{-1} (base_k + mult_k * x_prev),  x_prev(start) = 0,
+
+    optionally clamped at 0 after each stage — exactly the
+    ``ops.fused_chain_solve`` contract, with the dense triangular
+    substitutions replaced by O(E) fixed-point sweeps.
+    """
+    V = base.shape[-1]
+    cap = V + 2
+    # scan over the stage axis: move K in front of the member axis
+    vals_t = jnp.moveaxis(vals, 1, 0)      # (K, B, V, D)
+    base_t = jnp.moveaxis(base, 1, 0)      # (K, B, V)
+    mult_t = jnp.moveaxis(mult, 1, 0)
+
+    def step(x_prev, xs):
+        vals_k, base_k, mult_k = xs
+        x = _fixed_point(vals_k, nbr, base_k + mult_k * x_prev, cap)
+        if clamp:
+            x = jnp.maximum(x, 0.0)
+        return x, x
+
+    _, xs = jax.lax.scan(step, jnp.zeros_like(base_t[0]),
+                         (vals_t, base_t, mult_t), reverse=reverse)
+    return jnp.moveaxis(xs, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Partition-blocked (BSR) Pallas kernel
+# ---------------------------------------------------------------------------
+
+def block_values(M: jnp.ndarray, blk_nbr: jnp.ndarray, blk_mask: jnp.ndarray,
+                 block: int) -> jnp.ndarray:
+    """Gather the nonzero ``block x block`` blocks of a stage matrix stack.
+
+    M (..., V, V), blk_nbr/blk_mask (NB, BD) -> bvals (..., NB, BD, bs, bs)
+    with ``bvals[..., I, d] = M[rows of I, cols of blk_nbr[I, d]]`` (zero
+    where masked).  V is zero-padded to NB*bs — exact for the fixed-point
+    form, which needs no diagonal.
+    """
+    NB, BD = blk_nbr.shape
+    Vp = NB * block
+    V = M.shape[-1]
+    if Vp != V:
+        widths = [(0, 0)] * (M.ndim - 2) + [(0, Vp - V), (0, Vp - V)]
+        M = jnp.pad(M, widths)
+    Mb = M.reshape(M.shape[:-2] + (NB, block, NB, block))
+    Mb = jnp.swapaxes(Mb, -3, -2)                        # (..., NB, NB, bs, bs)
+    idx = jnp.broadcast_to(blk_nbr[:, :, None, None],
+                           Mb.shape[:-3] + (BD, block, block))
+    bvals = jnp.take_along_axis(Mb, idx, axis=-3)        # (..., NB, BD, bs, bs)
+    return jnp.where(blk_mask[:, :, None, None], bvals, 0.0)
+
+
+def _bsr_chain_kernel(nbr_ref, bvals_ref, base_ref, mult_ref, out_ref, *,
+                      reverse: bool, clamp: bool, cap: int):
+    """One flattened member per grid step; stage chain unrolled in-kernel.
+
+    bvals (1, K, NB, BD, bs, bs), base/mult/out (1, K, Vp), nbr (NB, BD).
+    Each sweep touches only the NB*BD nonzero blocks — BD dense (bs, bs)
+    matmuls per block row, accumulated into the row block of the new
+    iterate.
+    """
+    K, NB, BD, bs = bvals_ref.shape[1:5]
+    Vp = NB * bs
+
+    def solve_stage(k: int, b):
+        bvals_k = bvals_ref[0, k]                        # (NB, BD, bs, bs)
+
+        def sweep(x):
+            rows = []
+            for I in range(NB):
+                acc = jax.lax.dynamic_slice(b, (I * bs,), (bs,))
+                for d in range(BD):
+                    J = nbr_ref[I, d]
+                    xj = jax.lax.dynamic_slice(x, (J * bs,), (bs,))
+                    acc = acc + bvals_k[I, d] @ xj
+                rows.append(acc)
+            y = jnp.concatenate(rows)
+            bad = ~jnp.isfinite(y) | (jnp.abs(y) > _DIVERGE)
+            return jnp.where(bad, jnp.inf, y)
+
+        def cond(carry):
+            x, prev, i = carry
+            return jnp.any(x != prev) & (i < cap)
+
+        def body(carry):
+            x, _, i = carry
+            return sweep(x), x, i + 1
+
+        x0 = sweep(jnp.zeros((Vp,), b.dtype))
+        prev0 = jnp.full((Vp,), jnp.inf, b.dtype)
+        x, _, _ = jax.lax.while_loop(cond, body, (x0, prev0, jnp.int32(1)))
+        return x
+
+    ks = range(K - 1, -1, -1) if reverse else range(K)
+    x_prev = jnp.zeros((Vp,), base_ref.dtype)
+    for k in ks:
+        b = base_ref[0, k] + mult_ref[0, k] * x_prev
+        x = solve_stage(k, b)
+        if clamp:
+            x = jnp.maximum(x, 0.0)
+        out_ref[0, k, :] = x
+        x_prev = x
+
+
+def chain_solve_bsr(bvals: jnp.ndarray, blk_nbr: jnp.ndarray,
+                    base: jnp.ndarray, mult: jnp.ndarray, *,
+                    reverse: bool = False, clamp: bool = False,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Blocked-sparse fused chain solve (the Pallas path).
+
+    bvals (B, K, NB, BD, bs, bs) from :func:`block_values`, blk_nbr (NB, BD),
+    base/mult (B, K, V) -> x (B, K, V); same semantics as
+    :func:`chain_solve_nbr`.
+    """
+    B, K, NB, BD, bs = bvals.shape[:5]
+    Vp = NB * bs
+    V = base.shape[-1]
+    if Vp != V:
+        widths = ((0, 0), (0, 0), (0, Vp - V))
+        base = jnp.pad(base, widths)
+        mult = jnp.pad(mult, widths)
+    kernel = functools.partial(_bsr_chain_kernel, reverse=reverse,
+                               clamp=clamp, cap=V + 2)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((NB, BD), lambda b: (0, 0)),
+            pl.BlockSpec((1, K, NB, BD, bs, bs), lambda b: (b, 0, 0, 0, 0, 0)),
+            pl.BlockSpec((1, K, Vp), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, K, Vp), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K, Vp), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, Vp), base.dtype),
+        interpret=interpret,
+    )(blk_nbr, bvals, base, mult)
+    return out[..., :V]
+
+
+# ---------------------------------------------------------------------------
+# Neighbor-list blocked-set ("tagged node") sweep
+# ---------------------------------------------------------------------------
+
+def tagged_nbr(route_vals: jnp.ndarray, improper_vals: jnp.ndarray,
+               nbr: jnp.ndarray) -> jnp.ndarray:
+    """Category-3 tagged flags by O(E)-per-round sweeps on neighbor lists.
+
+    route_vals/improper_vals (..., V, D) bool — ``route``/``improper``
+    gathered onto the padded out-neighbor lists (masked columns False),
+    nbr (V, D) -> tagged (..., V) bool: the monotone fixed point of
+
+        tagged[p] = exists d: route[p, d] and (improper[p, d] or
+                                               tagged[nbr[p, d]])
+
+    The map is monotone (tagged only grows), so the ``!=`` early exit is
+    exact: the result is bit-equal to the dense V-round scan and the bitset
+    sweep, at O(E) per round instead of O(V^2)(/32) (DESIGN.md §18).
+    """
+    V = route_vals.shape[-2]
+    seed = jnp.any(route_vals & improper_vals, axis=-1)       # (..., V)
+
+    def cond(carry):
+        t, prev, i = carry
+        return jnp.any(t != prev) & (i < V + 1)
+
+    def body(carry):
+        t, _, i = carry
+        hit = seed | jnp.any(route_vals & t[..., nbr], axis=-1)
+        return hit, t, i + 1
+
+    prev0 = jnp.zeros_like(seed)
+    t, _, _ = jax.lax.while_loop(cond, body, (seed, prev0, jnp.int32(1)))
+    return t
