@@ -15,6 +15,31 @@ RESULTS_DIR = os.path.join(_REPO_ROOT, "results")
 # so future PRs can diff against the committed numbers and catch regressions.
 BENCH_PATH = os.path.join(_REPO_ROOT, "BENCH_gp.json")
 
+# bench_record refuses to overwrite committed rows from a loaded box: the
+# 1.5x bench_check gate assumes rows were timed near-idle, and one contended
+# rewrite poisons the committed trajectory for every later diff.  The guard
+# triggers when the 1-min loadavg exceeds this multiple of the core count.
+LOADAVG_CONTENTION_RATIO = 1.5
+
+
+def _box_is_contended() -> float | None:
+    """1-min loadavg when the box is too busy to trust timings, else None.
+
+    ``BENCH_FORCE_RECORD=1`` disables the guard (dedicated runners whose
+    steady-state load is legitimately high, or deliberate re-baselining).
+    Platforms without ``os.getloadavg`` (Windows) never report contention.
+    """
+    if os.environ.get("BENCH_FORCE_RECORD"):
+        return None
+    try:
+        load1 = os.getloadavg()[0]
+    except (AttributeError, OSError):
+        return None
+    cores = os.cpu_count() or 1
+    if load1 > LOADAVG_CONTENTION_RATIO * cores:
+        return load1
+    return None
+
 
 def _default_backend() -> str:
     """The JAX backend rows are stamped with (lazy import — keep the module
@@ -43,6 +68,11 @@ def bench_record(bench: str, *, scenario: str, V: int, solver: str,
     ``seconds`` is wall clock for the measured unit; when ``iters`` (total
     committed GP iterations) is given a derived ``s_per_iter`` is stored.
     Extra keyword fields (e.g. ``speedup``, ``n``) are stored verbatim.
+
+    On a contended box (1-min loadavg > ``LOADAVG_CONTENTION_RATIO`` x
+    cores) the row is returned but NOT written — contended timings would
+    replace trustworthy committed rows and trip the bench_check gate on the
+    next idle run.  Set ``BENCH_FORCE_RECORD=1`` to record anyway.
     """
     row = {"bench": bench, "scenario": scenario, "V": int(V),
            "solver": solver,
@@ -52,6 +82,13 @@ def bench_record(bench: str, *, scenario: str, V: int, solver: str,
         row["iters"] = int(iters)
         row["s_per_iter"] = round(float(seconds) / max(int(iters), 1), 8)
     row.update(extra)
+    load1 = _box_is_contended()
+    if load1 is not None:
+        print(f"bench_record: SKIP {bench}/{scenario}/{solver} — box is "
+              f"contended (loadavg {load1:.1f} > "
+              f"{LOADAVG_CONTENTION_RATIO:.1f}x {os.cpu_count()} cores); "
+              f"set BENCH_FORCE_RECORD=1 to record anyway")
+        return row
     rows = []
     if os.path.exists(BENCH_PATH):
         try:

@@ -39,11 +39,27 @@ member ends feasible and finite, and no served cost ever exceeds the
 member's last-known-good incumbent on the current instance — and records a
 (online, chaos-trace{N}, 11, online-chaos) row with degradation-ladder hit
 counts, status tallies, injection/quarantine counts.
+
+``--trace-out PREFIX`` arms the §19 observability layer on either leg:
+the solver runs with device telemetry + a metrics registry + a span
+tracer, and four artifacts land next to PREFIX —
+
+  * ``PREFIX.trace.json``   — Chrome-trace/perfetto span timeline
+  * ``PREFIX.events.jsonl`` — one line per HealthReport
+  * ``PREFIX.iters.jsonl``  — per-iteration device telemetry records
+  * ``PREFIX.metrics.json`` — counters/gauges/histograms snapshot
+
+``python -m repro.obs.report --trace PREFIX`` turns them into the
+per-member timeline + fleet summary (and ``--check-bench`` cross-checks
+the event iteration totals against the committed BENCH_gp.json row).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import os
 import sys
 import time
 
@@ -53,6 +69,7 @@ sys.path.insert(0, ".")
 import numpy as np
 
 from benchmarks.common import bench_record, save_json
+from repro import obs
 from repro.core import events, faults, gp, network
 from repro.core.scenarios import FIG6_SCALES
 from repro.serve.online import OnlineSolver
@@ -63,7 +80,54 @@ ALPHA, TOL = 0.1, 1e-4
 LKG_MARGIN = 2e-4
 
 
-def run_trace(scales, n_events: int, seed: int, spare_apps: int = 2) -> dict:
+def _obs_kit(trace_out: str | None):
+    """(solver kwargs, metrics, tracer) for ``--trace-out`` — all empty/None
+    when tracing is off so the measured path stays exactly the shipped one."""
+    if not trace_out:
+        return {}, None, None
+    metrics, tracer = obs.Metrics(), obs.Tracer()
+    return dict(telemetry=True, metrics=metrics, tracer=tracer), metrics, tracer
+
+
+def _jsonable(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return str(o)
+
+
+def export_obs(prefix: str, solver: OnlineSolver, reports, metrics,
+               tracer) -> dict:
+    """Write the four ``--trace-out`` artifacts; returns {name: path}."""
+    d = os.path.dirname(os.path.abspath(prefix))
+    os.makedirs(d, exist_ok=True)
+    obs.collect_compile_caches(metrics)
+    paths = {"trace": prefix + ".trace.json",
+             "events": prefix + ".events.jsonl",
+             "iters": prefix + ".iters.jsonl",
+             "metrics": prefix + ".metrics.json"}
+    tracer.export_chrome(paths["trace"],
+                         tid_names={b: f"member-{b}"
+                                    for b in range(solver.B)})
+    with open(paths["events"], "w") as f:
+        for t, r in enumerate(reports):
+            row = {fld.name: getattr(r, fld.name)
+                   for fld in dataclasses.fields(r) if fld.name != "event"}
+            row["t"] = t
+            row["event"] = type(r.event).__name__
+            f.write(json.dumps(row, default=_jsonable) + "\n")
+    with open(paths["iters"], "w") as f:
+        for rec in solver.iter_trace:
+            f.write(json.dumps(rec, default=_jsonable) + "\n")
+    metrics.export_json(paths["metrics"])
+    return paths
+
+
+def run_trace(scales, n_events: int, seed: int, spare_apps: int = 2,
+              trace_out: str | None = None) -> dict:
     insts = [network.table_ii_instance("abilene", seed=seed, rate_scale=s)
              for s in scales]
     members = events.pad_fleet(insts, spare_apps=spare_apps)
@@ -71,8 +135,9 @@ def run_trace(scales, n_events: int, seed: int, spare_apps: int = 2) -> dict:
     snaps = events.replay(members, trace)
 
     # --- online service ---
+    obs_kw, metrics, tracer = _obs_kit(trace_out)
     solver = OnlineSolver(insts, spare_apps=spare_apps, alpha=ALPHA, tol=TOL,
-                          accel=True)
+                          accel=True, **obs_kw)
     t0 = time.perf_counter()
     reports = solver.step(trace)
     online_s = time.perf_counter() - t0
@@ -110,7 +175,10 @@ def run_trace(scales, n_events: int, seed: int, spare_apps: int = 2) -> dict:
          "solved": r.solved_apps, "skipped": r.skipped_apps,
          "cold_restart": r.cold_restart, "kept_window": r.kept_window}
         for t, r in enumerate(reports)]
+    trace_files = (export_obs(trace_out, solver, reports, metrics, tracer)
+                   if trace_out else None)
     return {
+        "trace_files": trace_files,
         "n_events": n_events, "seed": seed, "scales": list(scales),
         "online_s": online_s, "online_iters": online_iters,
         "cold_s": cold_s, "cold_iters": cold_iters,
@@ -121,15 +189,19 @@ def run_trace(scales, n_events: int, seed: int, spare_apps: int = 2) -> dict:
     }
 
 
-def run_chaos(scales, n_events: int, seed: int, spare_apps: int = 2) -> dict:
+def run_chaos(scales, n_events: int, seed: int, spare_apps: int = 2,
+              trace_out: str | None = None) -> dict:
     """The §17 survival leg: chaos trace + fault injection + debug checks."""
     insts = [network.table_ii_instance("abilene", seed=seed, rate_scale=s)
              for s in scales]
     members = events.pad_fleet(insts, spare_apps=spare_apps)
     steps = faults.chaos_trace(members, n_events=n_events, seed=seed)
-    injector = faults.FaultInjector(seed=seed + 1, p_inject=0.15)
+    obs_kw, metrics, tracer = _obs_kit(trace_out)
+    injector = faults.FaultInjector(seed=seed + 1, p_inject=0.15,
+                                    metrics=metrics)
     solver = OnlineSolver(insts, spare_apps=spare_apps, alpha=ALPHA, tol=TOL,
-                          accel=True, debug=True, fault_injector=injector)
+                          accel=True, debug=True, fault_injector=injector,
+                          **obs_kw)
 
     t0 = time.perf_counter()
     reports = []
@@ -156,7 +228,10 @@ def run_chaos(scales, n_events: int, seed: int, spare_apps: int = 2) -> dict:
     for r in reports:
         statuses[r.status] = statuses.get(r.status, 0) + 1
     n_events_run = len(reports)
+    trace_files = (export_obs(trace_out, solver, reports, metrics, tracer)
+                   if trace_out else None)
     return {
+        "trace_files": trace_files,
         "n_events": n_events_run, "n_steps": len(steps), "seed": seed,
         "scales": list(scales), "chaos_s": chaos_s,
         "online_iters": solver.event_iters,
@@ -175,7 +250,7 @@ def run_chaos(scales, n_events: int, seed: int, spare_apps: int = 2) -> dict:
 def chaos_main(args) -> dict:
     scales = FIG6_SCALES[:3] if args.smoke else FIG6_SCALES
     n_events = 30 if args.smoke else args.events
-    out = run_chaos(scales, n_events, args.seed)
+    out = run_chaos(scales, n_events, args.seed, trace_out=args.trace_out)
 
     label = f"chaos-trace{n_events}"
     bench_record("online", scenario=label, V=11, solver="online-chaos",
@@ -199,6 +274,9 @@ def chaos_main(args) -> dict:
           f"rollbacks: {out['rollbacks']}, shed: {out['shed_apps']}")
     print("OK: all members end feasible+finite; "
           "served costs never exceeded the LKG incumbent")
+    if out["trace_files"]:
+        print("trace artifacts: "
+              + " ".join(sorted(out["trace_files"].values())))
     return out
 
 
@@ -210,6 +288,10 @@ def main(argv=None) -> dict:
                     help="small trace (10 events, 3 members) for CI")
     ap.add_argument("--chaos", action="store_true",
                     help="run the §17 chaos/fault-injection survival leg")
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="write §19 observability artifacts "
+                         "(PREFIX.trace.json, .events.jsonl, .iters.jsonl, "
+                         ".metrics.json)")
     args = ap.parse_args(argv)
     if args.chaos:
         if args.events == 50:
@@ -218,7 +300,7 @@ def main(argv=None) -> dict:
 
     scales = FIG6_SCALES[:3] if args.smoke else FIG6_SCALES
     n_events = 10 if args.smoke else args.events
-    out = run_trace(scales, n_events, args.seed)
+    out = run_trace(scales, n_events, args.seed, trace_out=args.trace_out)
 
     label = f"fig6-trace{n_events}"
     bench_record("online", scenario=label, V=11, solver="online",
@@ -256,6 +338,9 @@ def main(argv=None) -> dict:
     assert out["gate_hits"] > 0, "skip gate never fired"
     print(f"OK: parity <= 1e-4, iters <= {ratio_cap}x cold-accel, "
           "skip gate active")
+    if out["trace_files"]:
+        print("trace artifacts: "
+              + " ".join(sorted(out["trace_files"].values())))
     return out
 
 

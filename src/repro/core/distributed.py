@@ -114,7 +114,7 @@ _N_SPARSE = 7   # sparse-topology arrays threaded through the chunk program
 def _chunk_program(mesh: Mesh, axis: str, node_axis, link_kind: int,
                    comp_kind: int, length: int, scaled: bool, solver: str,
                    blocked: str, has_masks: bool, has_sparse: bool = False,
-                   accel=None):
+                   accel=None, telemetry=None):
     """Build the jitted shard_map'd chunk for one (mesh, config) combination.
 
     The stacked Instance is decomposed into per-application (app-sharded)
@@ -148,6 +148,13 @@ def _chunk_program(mesh: Mesh, axis: str, node_axis, link_kind: int,
     global buffer layout is never interpreted.  The adaptive ``alpha`` and
     history count ``ak`` are replicated (the winning rung and the push
     cadence are shard-identical by construction).
+
+    The §19 telemetry ring ``tb`` is replicated: every recorded column is
+    already a psum/pmax-reduced fleet quantity inside the engine, so each
+    shard writes the identical rows and the ring adds no collectives.
+    ``telemetry`` (a resolved hashable :class:`engine.TelemetryConfig` or
+    None) is part of the cache key; with None the ring is (0, TEL_WIDTH)
+    and the program is identical to the pre-telemetry one.
     """
     node_shards = int(mesh.shape[node_axis]) if node_axis is not None else 1
     app = P(None, axis)     # (B, A, ...): member axis plain, apps sharded
@@ -161,12 +168,12 @@ def _chunk_program(mesh: Mesh, axis: str, node_axis, link_kind: int,
               adj, link_param, comp_param, wnode,         # replicated
               phi_e, phi_c,                               # app-sharded carry
               best_cost, stall, done, iters, cost, residual,
-              aalpha, ax, af, ak,                         # accel carry (§15)
+              aalpha, ax, af, ak, tb,                     # accel (§15) + ring (§19)
               alpha, tol, patience, max_iters, *extra):
 
         def one(L, w, r, dst, n_tasks, stage_mask, adj, link_param,
                 comp_param, wnode, phi_e, phi_c, best_cost, stall, done,
-                iters, cost, residual, aalpha, ax, af, ak,
+                iters, cost, residual, aalpha, ax, af, ak, tb,
                 out_nbr, out_mask, in_nbr, in_mask, node_part,
                 blk_nbr, blk_mask, ae, ac):
             V = adj.shape[-1]
@@ -186,13 +193,13 @@ def _chunk_program(mesh: Mesh, axis: str, node_axis, link_kind: int,
             carry = engine.ScanCarry(
                 phi=Phi(e=phi_e, c=phi_c), best_cost=best_cost, stall=stall,
                 done=done, iters=iters, cost=cost, residual=residual,
-                alpha=aalpha, ax=ax, af=af, ak=ak,
+                alpha=aalpha, ax=ax, af=af, ak=ak, tb=tb,
             )
             carry, (cs, rs) = engine.scan_chunk(
                 inst_l, carry, alpha, tol, patience, max_iters, ae, ac,
                 length=length, scaled=scaled, solver=solver, blocked=blocked,
                 axis=axis, node_axis=node_axis, node_shards=node_shards,
-                accel=accel,
+                accel=accel, telemetry=telemetry,
             )
             pe = carry.phi.e
             if node_axis is not None:
@@ -204,27 +211,27 @@ def _chunk_program(mesh: Mesh, axis: str, node_axis, link_kind: int,
                 pe = jax.lax.dynamic_slice_in_dim(pe, i0, rl, axis=2)
             return (pe, carry.phi.c, carry.best_cost, carry.stall,
                     carry.done, carry.iters, carry.cost, carry.residual,
-                    carry.alpha, carry.ax, carry.af, carry.ak,
+                    carry.alpha, carry.ax, carry.af, carry.ak, carry.tb,
                     cs, rs)
 
         off = _N_SPARSE if has_sparse else 0
         sparse_arrs = extra[:off] if has_sparse else (None,) * _N_SPARSE
         masks = extra[off:]
         ae, ac = masks if has_masks else (None, None)
-        in_axes = ((0,) * 22 + ((0,) * _N_SPARSE if has_sparse
+        in_axes = ((0,) * 23 + ((0,) * _N_SPARSE if has_sparse
                                 else (None,) * _N_SPARSE)
                    + ((0, 0) if has_masks else (None, None)))
         return jax.vmap(one, in_axes=in_axes)(
             L, w, r, dst, n_tasks, stage_mask, adj, link_param, comp_param,
             wnode, phi_e, phi_c, best_cost, stall, done, iters, cost,
-            residual, aalpha, ax, af, ak, *sparse_arrs, ae, ac)
+            residual, aalpha, ax, af, ak, tb, *sparse_arrs, ae, ac)
 
     in_specs = ((app,) * 6 + (rep,) * 4 + (row, app) + (rep,) * 6
-                + (rep, buf, buf, rep)
+                + (rep, buf, buf, rep, rep)
                 + (rep,) * 4
                 + ((rep,) * _N_SPARSE if has_sparse else ())
                 + ((app, app) if has_masks else ()))
-    out_specs = ((row, app) + (rep,) * 6 + (rep, buf, buf, rep)
+    out_specs = ((row, app) + (rep,) * 6 + (rep, buf, buf, rep, rep)
                  + (rep, rep))
     smapped = compat.shard_map(chunk, mesh=mesh, in_specs=in_specs,
                                out_specs=out_specs, check=False)
@@ -264,6 +271,7 @@ def solve_sharded_batched(
     solver: str = "auto",
     blocked: str = "bitset",
     accel=None,
+    telemetry=None,
 ) -> gp.GPScan:
     """Solve a padded scenario family with applications sharded over `axis`.
 
@@ -290,6 +298,7 @@ def solve_sharded_batched(
     Bucket sizes are quantized to powers of two to bound XLA recompiles.
     """
     accel = engine.resolve_accel(accel)
+    telemetry = engine.resolve_telemetry(telemetry)
     n_shards = mesh.shape[axis]
     node_shards = int(mesh.shape[node_axis]) if node_axis is not None else 1
     B = int(binst.adj.shape[0])
@@ -309,7 +318,8 @@ def solve_sharded_batched(
         raise ValueError("pass both allowed_e and allowed_c, or neither")
 
     carry = jax.vmap(
-        lambda i, p: engine.init_carry(i, p, accel=accel))(binst_p, phi0)
+        lambda i, p: engine.init_carry(i, p, accel=accel,
+                                       telemetry=telemetry))(binst_p, phi0)
     alpha_, tol_ = jnp.float32(alpha), jnp.float32(tol)
     patience_, max_iters_ = jnp.int32(patience), jnp.int32(max_iters)
 
@@ -323,6 +333,8 @@ def solve_sharded_batched(
     out_cost = np.asarray(carry.cost).copy()
     out_res = np.full((B,), np.inf, np.float32)
     out_iters = np.zeros((B,), np.int32)
+    ring = telemetry.ring if telemetry is not None else 0
+    out_tb = np.zeros((B, ring, engine.TEL_WIDTH), np.float32)
     written = np.zeros((B,), np.int64)
 
     ids = np.arange(B)                    # lane -> original member (-1: pad)
@@ -348,23 +360,23 @@ def solve_sharded_batched(
         length = min(_CHUNK, max_iters - steps)
         fn = _chunk_program(mesh, axis, node_axis, inst_p.link_kind,
                             inst_p.comp_kind, length, scaled, solver,
-                            blocked, has_masks, has_sparse, accel)
+                            blocked, has_masks, has_sparse, accel, telemetry)
         sparse_args = _sparse_args(inst_p) if has_sparse else ()
         mask_args = (ae_p, ac_p) if has_masks else ()
         phi_e_in = _pad_rows(c.phi.e, Vp, ax=3)
         (phi_e, phi_c, best, stall, done, iters, cost, residual,
-         aalpha, ax, af, ak, cs, rs
+         aalpha, ax, af, ak, tb, cs, rs
          ) = fn(inst_p.L, inst_p.w, inst_p.r, inst_p.dst,
                 inst_p.n_tasks, inst_p.stage_mask, inst_p.adj,
                 inst_p.link_param, inst_p.comp_param, inst_p.wnode,
                 phi_e_in, c.phi.c, c.best_cost, c.stall, c.done, c.iters,
-                c.cost, c.residual, c.alpha, c.ax, c.af, c.ak,
+                c.cost, c.residual, c.alpha, c.ax, c.af, c.ak, c.tb,
                 alpha_, tol_, patience_, max_iters_,
                 *sparse_args, *mask_args)
         c = engine.ScanCarry(phi=Phi(e=phi_e[:, :, :, :V], c=phi_c),
                              best_cost=best, stall=stall, done=done,
                              iters=iters, cost=cost, residual=residual,
-                             alpha=aalpha, ax=ax, af=af, ak=ak)
+                             alpha=aalpha, ax=ax, af=af, ak=ak, tb=tb)
         valid = ids >= 0
         vids = ids[valid]
         cost_hist[vids, steps + 1: steps + 1 + length] = np.asarray(cs)[valid]
@@ -381,6 +393,8 @@ def solve_sharded_batched(
             out_cost[rids] = np.asarray(c.cost)[retiring]
             out_res[rids] = np.asarray(c.residual)[retiring]
             out_iters[rids] = np.asarray(c.iters)[retiring]
+            if telemetry is not None:
+                out_tb[rids] = np.asarray(c.tb)[retiring]
 
         active = valid & ~done_h
         n_act = int(active.sum())
@@ -418,6 +432,7 @@ def solve_sharded_batched(
         cost_history=jnp.asarray(cost_hist),
         residual_history=jnp.asarray(res_hist),
         iterations=jnp.asarray(out_iters),
+        telemetry=jnp.asarray(out_tb) if telemetry is not None else None,
     )
 
 
@@ -438,6 +453,7 @@ def solve_sharded(
     solver: str = "auto",
     blocked: str = "bitset",
     accel=None,
+    telemetry=None,
 ) -> gp.GPResult:
     """Run GP with applications sharded across a device mesh axis.
 
@@ -456,10 +472,12 @@ def solve_sharded(
         phi0=None if phi0 is None else lift(phi0),
         allowed_e=None if allowed_e is None else lift(allowed_e),
         allowed_c=None if allowed_c is None else lift(allowed_c),
-        scaled=scaled, solver=solver, blocked=blocked, accel=accel)
+        scaled=scaled, solver=solver, blocked=blocked, accel=accel,
+        telemetry=telemetry)
     member = jax.tree_util.tree_map(lambda x: x[0], scan)
     return gp.GPResult(
         phi=member.phi, cost_history=member.cost_history,
         residual_history=member.residual_history,
         iterations=int(member.iterations),
+        telemetry=member.telemetry,
     ).trim()

@@ -61,6 +61,11 @@ from repro.core.traffic import (
 )
 from repro.kernels import blocked_sets as blocked_sets_mod
 from repro.kernels import ops
+from repro.obs.device import (
+    COL_ALPHA, COL_ANDERSON, COL_BS_ROUNDS, COL_COST, COL_ITER,
+    COL_PHI_DELTA, COL_RESIDUAL, COL_RUNG, TEL_WIDTH, TelemetryConfig,
+    empty_ring, resolve_telemetry, ring_record,
+)
 
 TIE_EPS = 1e-6      # directions within this of the min-delta receive mass
 BLOCK_EPS = 1e-7    # strictness slack for pdt comparisons
@@ -135,14 +140,17 @@ class GPState(NamedTuple):
     cost: jnp.ndarray
     residual: jnp.ndarray    # sufficiency-condition residual (0 => optimal)
     alpha: jnp.ndarray | float = 0.0   # stepsize the winning ladder rung used
+    rung: jnp.ndarray | int = 0        # winning ladder-rung index
+    bs_rounds: jnp.ndarray | int = -1  # blocked-set sweep rounds (§19; -1 off)
 
 
 class ScanCarry(NamedTuple):
-    """Carry of the chunked GP scan (DESIGN.md §10, accel fields §15).
+    """Carry of the chunked GP scan (DESIGN.md §10, accel fields §15,
+    telemetry ring §19).
 
-    The three accel fields are zero-size placeholders when the matching
-    mechanism is off (the carry pytree structure is fixed per static
-    config, so the scan body simply never touches them):
+    The accel fields and the telemetry ring are zero-size placeholders
+    when the matching mechanism is off (the carry pytree structure is
+    fixed per static config, so the scan body simply never touches them):
 
       alpha    f32 scalar, the member's adaptive stepsize (0 = unseeded —
                the first iteration adopts the driver's ``alpha`` argument)
@@ -151,6 +159,13 @@ class ScanCarry(NamedTuple):
                gain the member axis, under ``shard_map`` the N axis holds
                the shard-local app slab (opaque, roundtripped per shard)
       ak       int32, #history pairs pushed so far
+      tb       (R, TEL_WIDTH) f32 iteration-telemetry ring (§19): one row
+               per committed iteration, write index = ``iters`` (both are
+               masked by the ``done`` freeze and zeroed together by
+               ``reset_carry``), truncating — not wrapping — past R.
+               Every column is replicated under ``shard_map`` (values
+               derive from the psum-reduced F/G or are pmax-reduced), so
+               the ring travels with a replicated spec.
     """
 
     phi: Phi
@@ -164,6 +179,7 @@ class ScanCarry(NamedTuple):
     ax: jnp.ndarray          # (m, N) Anderson iterate history (§15)
     af: jnp.ndarray          # (m, N) Anderson residual history (§15)
     ak: jnp.ndarray          # int32, Anderson history count (§15)
+    tb: jnp.ndarray          # (R, TEL_WIDTH) telemetry ring (§19)
 
 
 def _pmax(x: jnp.ndarray, axis: Optional[str]) -> jnp.ndarray:
@@ -185,7 +201,8 @@ _NBR_AUTO_MIN_V = 128
 
 def _tagged_nbr_sharded(route: jnp.ndarray, improper: jnp.ndarray,
                         nbr: jnp.ndarray, mask: jnp.ndarray,
-                        node_axis: str, node_shards: int) -> jnp.ndarray:
+                        node_axis: str, node_shards: int, *,
+                        with_rounds: bool = False):
     """Node-parallel tagged sweep: each node shard owns a V/n row slab.
 
     The category-3 fixed point tagged[p] = ∃d: route[p,d] & (improper[p,d]
@@ -196,6 +213,10 @@ def _tagged_nbr_sharded(route: jnp.ndarray, improper: jnp.ndarray,
     per round — the §18 2-D-mesh realization of the paper's node-parallel
     broadcast.  Monotone fixed point ⇒ bit-equal to the dense/replicated
     sweeps; the exact-settle loop exits at the shared fixed point.
+
+    ``with_rounds=True`` also returns the loop's round counter (§19
+    telemetry).  The exit test reads the all-gathered full-V frontier, so
+    the counter is identical on every node shard by construction.
     """
     V = route.shape[-1]
     rl = V // node_shards
@@ -222,15 +243,18 @@ def _tagged_nbr_sharded(route: jnp.ndarray, improper: jnp.ndarray,
         return i + 1, sweep(t), t
 
     t0 = jax.lax.all_gather(seed_l, node_axis, axis=-1, tiled=True)
-    _, t, _ = jax.lax.while_loop(
+    rounds, t, _ = jax.lax.while_loop(
         cond, body, (jnp.int32(0), t0, jnp.zeros_like(t0) | True))
+    if with_rounds:
+        return t, rounds
     return t
 
 
 def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray,
                  method: str = "bitset", *,
                  node_axis: Optional[str] = None,
-                 node_shards: int = 1) -> jnp.ndarray:
+                 node_shards: int = 1,
+                 with_rounds: bool = False):
     """(A,K1,V,V) bool: j in B_i(a,k).
 
     j is blocked for i at stage (a,k) if (Section IV "Blocked node set"):
@@ -253,29 +277,46 @@ def blocked_sets(inst: Instance, phi: Phi, pdt: jnp.ndarray,
 
     Entirely local to an application shard: the routing DAG of stage (a,k)
     never couples applications, so the mesh path calls this unchanged.
+
+    ``with_rounds=True`` additionally returns the tagged sweep's settled
+    round count (int32; -1 on paths without a counter — the dense scan and
+    the pallas kernel).  The telemetry ring records it as the frontier-depth
+    column (DESIGN.md §19); requesting it changes no blocking arithmetic.
     """
     route = phi.e > 0.0                                         # (A,K1,V,V)
     worse = pdt[:, :, None, :] > pdt[:, :, :, None] + BLOCK_EPS  # pdt_q > pdt_p
     improper = route & worse
 
+    rounds = jnp.int32(-1)
     if (method == "bitset" and inst.has_sparse
             and inst.V >= _NBR_AUTO_MIN_V):
         method = "nbr"
     if method == "nbr":
         if (node_axis is not None and node_shards > 1
                 and inst.V % node_shards == 0):
-            tagged = _tagged_nbr_sharded(route, improper, inst.out_nbr,
-                                         inst.out_mask, node_axis,
-                                         node_shards)
+            res = _tagged_nbr_sharded(route, improper, inst.out_nbr,
+                                      inst.out_mask, node_axis,
+                                      node_shards, with_rounds=with_rounds)
+            tagged, rounds = res if with_rounds else (res, rounds)
+        elif with_rounds:
+            tagged, rounds = ops.blocked_tagged_nbr(
+                route, improper, inst.out_nbr, inst.out_mask,
+                with_rounds=True)
         else:
             tagged = ops.blocked_tagged_nbr(route, improper,
                                             inst.out_nbr, inst.out_mask)
     elif method == "bitset":
-        tagged = ops.blocked_tagged(route, improper)
+        if with_rounds:
+            tagged, rounds = ops.blocked_tagged(route, improper,
+                                                with_rounds=True)
+        else:
+            tagged = ops.blocked_tagged(route, improper)
     else:
         tagged = blocked_sets_mod.tagged_scan_dense(route, improper)
 
     blocked = (~inst.adj[None, None]) | improper | worse | tagged[:, :, None, :]
+    if with_rounds:
+        return blocked, rounds
     return blocked
 
 
@@ -315,6 +356,7 @@ def gp_step(
     node_shards: int = 1,
     accel: Optional[AccelConfig] = None,
     app_mask: Optional[jnp.ndarray] = None,
+    telemetry: Optional[TelemetryConfig] = None,
 ) -> GPState:
     """One fused GP iteration; ``axis`` selects the F/G reduction (above).
 
@@ -350,9 +392,19 @@ def gp_step(
     fl = flows(inst, phi, fact, solver=solver, axis=axis)
     m = marginals(inst, phi, fl, fact, solver=solver)
 
-    avail_e = inst.adj[None, None] & ~blocked_sets(
-        inst, phi, m.pdt, method=blocked,
-        node_axis=node_axis, node_shards=node_shards)
+    want_rounds = telemetry is not None and telemetry.bs_rounds
+    if want_rounds:
+        bset, bs_rounds = blocked_sets(
+            inst, phi, m.pdt, method=blocked,
+            node_axis=node_axis, node_shards=node_shards, with_rounds=True)
+        # per-app-shard sweeps may settle at different depths; report the
+        # fleet-wide maximum so the ring column is replicated (§19)
+        bs_rounds = _pmax(bs_rounds, axis)
+    else:
+        bset = blocked_sets(inst, phi, m.pdt, method=blocked,
+                            node_axis=node_axis, node_shards=node_shards)
+        bs_rounds = jnp.int32(-1)
+    avail_e = inst.adj[None, None] & ~bset
     if allowed_e is not None:
         avail_e = avail_e & allowed_e
     avail_c = inst.cpu_allowed()[:, :, None]
@@ -457,7 +509,7 @@ def gp_step(
     residual = _pmax(jnp.maximum(jnp.max(exc_e), jnp.max(exc_c)), axis)
 
     return GPState(phi=new_phi, cost=cand_costs[best], residual=residual,
-                   alpha=ladder[best])
+                   alpha=ladder[best], rung=best, bs_rounds=bs_rounds)
 
 
 # ---------------------------------------------------------------------------
@@ -524,7 +576,8 @@ def _push_history(buf: jnp.ndarray, row: jnp.ndarray) -> jnp.ndarray:
 
 def init_carry(inst: Instance, phi: Phi, *, solver: str = "auto",
                axis: Optional[str] = None,
-               accel: Optional[AccelConfig] = None) -> ScanCarry:
+               accel: Optional[AccelConfig] = None,
+               telemetry: Optional[TelemetryConfig] = None) -> ScanCarry:
     cost0 = jnp.asarray(total_cost(inst, phi, solver=solver, axis=axis),
                         jnp.float32)
     m = accel.anderson_m if accel is not None else 0
@@ -541,6 +594,7 @@ def init_carry(inst: Instance, phi: Phi, *, solver: str = "auto",
         ax=jnp.zeros((m, n), jnp.float32),
         af=jnp.zeros((m, n), jnp.float32),
         ak=jnp.int32(0),
+        tb=empty_ring(telemetry),
     )
 
 
@@ -584,6 +638,9 @@ def reset_carry(inst: Instance, phi: Phi, carry: ScanCarry, *,
         ax=jnp.where(keep, carry.ax, jnp.zeros_like(carry.ax)),
         af=jnp.where(keep, carry.af, jnp.zeros_like(carry.af)),
         ak=jnp.where(keep, carry.ak, jnp.int32(0)),
+        # the ring restarts with iters: callers drain it *before* resetting
+        # (serve/online.py) — the valid prefix is always rows [0, iters)
+        tb=jnp.zeros_like(carry.tb),
     )
 
 
@@ -602,6 +659,7 @@ def scan_chunk(
     node_shards: int = 1,
     accel: Optional[AccelConfig] = None,
     app_mask: Optional[jnp.ndarray] = None,
+    telemetry: Optional[TelemetryConfig] = None,
 ):
     """Advance the solve by up to ``length`` iterations entirely on device.
 
@@ -640,7 +698,7 @@ def scan_chunk(
         state = gp_step(inst, c.phi, alpha_eff, allowed_e, allowed_c, scaled,
                         solver, blocked=blocked, axis=axis,
                         node_axis=node_axis, node_shards=node_shards,
-                        accel=accel, app_mask=app_mask)
+                        accel=accel, app_mask=app_mask, telemetry=telemetry)
 
         new_phi, new_cost = state.phi, state.cost
         ax, af, ak = c.ax, c.af, c.ak
@@ -701,20 +759,46 @@ def scan_chunk(
             af = jax.tree_util.tree_map(
                 lambda new, old: jnp.where(frz, old, new), af, c.af)
             ak = jnp.where(frz, c.ak, ak)
+        if use_phistop or telemetry is not None:
+            # phi-delta of the committed move; pmax-replicated across app
+            # shards.  Shared by the §15 fixed-point latch and the §19
+            # telemetry column (computed once when both are on).
+            moved = jnp.maximum(jnp.max(jnp.abs(new_phi.e - c.phi.e)),
+                                jnp.max(jnp.abs(new_phi.c - c.phi.c)))
+            moved = _pmax(moved, axis)
         if use_phistop:
             # phi-delta fixed point: a committed move at positive stepsize
             # that left phi (numerically) unchanged means the projection
             # map is stationary.  Gate on chosen > 0 so a 0-rung win (the
             # ladder rejecting every positive step) doesn't latch early.
-            moved = jnp.maximum(jnp.max(jnp.abs(new_phi.e - c.phi.e)),
-                                jnp.max(jnp.abs(new_phi.c - c.phi.c)))
-            moved = _pmax(moved, axis)
             fixed = (state.alpha > 0) & (moved <= accel.phi_tol)
             done = done | (~frz & fixed)
 
+        tb = c.tb
+        if telemetry is not None:
+            # every operand is already replicated across the mesh (cost,
+            # residual, alpha and rung derive from the psum-reduced ladder;
+            # bs_rounds and moved were pmax'd above), so the ring rides the
+            # carry with a replicated spec and costs no extra collectives.
+            if use_anderson:
+                anders = jnp.where(accept, 1.0, 0.0).astype(jnp.float32)
+            else:
+                anders = jnp.float32(-1.0)
+            row = jnp.stack([
+                c.iters.astype(jnp.float32),           # COL_ITER
+                new_cost.astype(jnp.float32),          # COL_COST
+                state.residual.astype(jnp.float32),    # COL_RESIDUAL
+                state.alpha.astype(jnp.float32),       # COL_ALPHA
+                jnp.asarray(state.rung, jnp.float32),  # COL_RUNG
+                anders,                                # COL_ANDERSON
+                jnp.asarray(state.bs_rounds, jnp.float32),  # COL_BS_ROUNDS
+                moved.astype(jnp.float32),             # COL_PHI_DELTA
+            ])
+            tb = ring_record(tb, c.iters, row, ~frz)
+
         nc = ScanCarry(phi=phi, best_cost=best, stall=stall, done=done,
                        iters=iters, cost=cost, residual=residual,
-                       alpha=new_alpha, ax=ax, af=af, ak=ak)
+                       alpha=new_alpha, ax=ax, af=af, ak=ak, tb=tb)
         return nc, (cost, residual)
 
     return jax.lax.scan(body, carry, None, length=length)

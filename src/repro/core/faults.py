@@ -72,18 +72,23 @@ class FaultInjector:
     ``p_inject`` is the per-event corruption probability; draws are made
     once per ``maybe_corrupt`` call, so a trace's injection schedule is a
     pure function of the injector seed.
+
+    ``metrics`` (a ``repro.obs.Metrics``, optional) receives a
+    ``faults.injected.<mode>`` counter tick per injection — ground truth
+    the §19 report can hold recovery counters against.
     """
 
     MODES = ("nan_carry", "denorm_phi")
 
     def __init__(self, seed: int = 0, p_inject: float = 0.2,
-                 modes: Sequence[str] = MODES):
+                 modes: Sequence[str] = MODES, metrics=None):
         for m in modes:
             if m not in self.MODES:
                 raise ValueError(f"unknown fault mode {m!r}")
         self._rng = np.random.default_rng(seed)
         self.p_inject = float(p_inject)
         self.modes = tuple(modes)
+        self.metrics = metrics
         self.log: list[Injection] = []
 
     def maybe_corrupt(self, carry_b: engine.ScanCarry, member: int,
@@ -98,6 +103,8 @@ class FaultInjector:
             carry_b = self._denorm_phi(carry_b)
         self.log.append(Injection(event_index=event_index, member=member,
                                   mode=mode))
+        if self.metrics is not None:
+            self.metrics.counter(f"faults.injected.{mode}")
         return carry_b, mode
 
     def _nan_carry(self, carry: engine.ScanCarry) -> engine.ScanCarry:

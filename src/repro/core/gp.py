@@ -64,6 +64,11 @@ class GPScan(NamedTuple):
     cost_history: jnp.ndarray      # (max_iters + 1,), [0] = initial cost
     residual_history: jnp.ndarray  # (max_iters,)
     iterations: jnp.ndarray        # int32, #iterations actually committed
+    # (R, TEL_WIDTH) per-iteration telemetry ring ((B, R, TEL_WIDTH) for the
+    # batched driver) when the solve ran with telemetry on; rows past
+    # ``iterations`` (clamped to R) are zero.  Decode with
+    # ``repro.obs.ring_valid(telemetry, iterations)`` (DESIGN.md §19).
+    telemetry: Optional[jnp.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -82,6 +87,10 @@ class GPResult:
     cost_history: jnp.ndarray
     residual_history: jnp.ndarray
     iterations: int
+    # raw (R, TEL_WIDTH) iteration ring when the solve ran with telemetry
+    # (``repro.obs.ring_valid`` trims it to the committed prefix); None
+    # when telemetry was off.  ``trim()`` preserves it untouched.
+    telemetry: Optional[jnp.ndarray] = None
 
     def __post_init__(self):
         self.cost_history = jnp.asarray(self.cost_history)
@@ -257,11 +266,11 @@ _init_carry = engine.init_carry
 
 @functools.partial(jax.jit,
                    static_argnames=("length", "scaled", "solver", "blocked",
-                                    "accel"))
+                                    "accel", "telemetry"))
 def _scan_chunk(
     inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
     *, length: int, scaled: bool = False, solver: str = "auto",
-    blocked: str = "bitset", accel=None, app_mask=None,
+    blocked: str = "bitset", accel=None, app_mask=None, telemetry=None,
 ):
     """Jitted single-device wrapper over :func:`engine.scan_chunk`.
 
@@ -271,11 +280,14 @@ def _scan_chunk(
     is a resolved :class:`engine.AccelConfig` (or None) riding as a static
     argument — each distinct config compiles its own program.  ``app_mask``
     ((A,) bool or None) freezes applications (the §16 skip gate).
+    ``telemetry`` (a resolved :class:`engine.TelemetryConfig` or None) is
+    likewise static: with None the carry's ring is (0, TEL_WIDTH) and the
+    compiled program is identical to the pre-telemetry one (§19).
     """
     return engine.scan_chunk(
         inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
         length=length, scaled=scaled, solver=solver, blocked=blocked,
-        axis=None, accel=accel, app_mask=app_mask)
+        axis=None, accel=accel, app_mask=app_mask, telemetry=telemetry)
 
 
 def solve_scan(
@@ -293,6 +305,7 @@ def solve_scan(
     blocked: str = "bitset",
     accel=None,
     app_mask: Optional[jnp.ndarray] = None,
+    telemetry=None,
 ) -> GPScan:
     """Algorithm 1 as a single device-resident ``lax.scan``.
 
@@ -325,18 +338,20 @@ def solve_scan(
     exact iteration.
     """
     accel = engine.resolve_accel(accel)
+    telemetry = engine.resolve_telemetry(telemetry)
     phi = phi0 if phi0 is not None else init_phi(inst)
-    carry0 = _init_carry(inst, phi, accel=accel)
+    carry0 = _init_carry(inst, phi, accel=accel, telemetry=telemetry)
     carry, (cs, rs) = _scan_chunk(
         inst, carry0, jnp.float32(alpha), jnp.float32(tol),
         jnp.int32(patience), jnp.int32(max_iters), allowed_e, allowed_c,
         length=max_iters, scaled=scaled, solver=solver, blocked=blocked,
-        accel=accel, app_mask=app_mask,
+        accel=accel, app_mask=app_mask, telemetry=telemetry,
     )
     return GPScan(
         phi=carry.phi, cost=carry.cost, residual=carry.residual,
         cost_history=jnp.concatenate([carry0.cost[None], cs]),
         residual_history=rs, iterations=carry.iters,
+        telemetry=carry.tb if telemetry is not None else None,
     )
 
 
@@ -372,6 +387,7 @@ def solve(
     blocked: str = "bitset",
     accel=None,
     app_mask: Optional[jnp.ndarray] = None,
+    telemetry=None,
 ) -> GPResult:
     """Run Algorithm 1 until the sufficiency residual falls below tol.
 
@@ -388,8 +404,9 @@ def solve(
     the shared F/G measurement, and the residual stop ignores them."""
     del track_every
     accel = engine.resolve_accel(accel)
+    telemetry = engine.resolve_telemetry(telemetry)
     phi = phi0 if phi0 is not None else init_phi(inst)
-    carry = _init_carry(inst, phi, accel=accel)
+    carry = _init_carry(inst, phi, accel=accel, telemetry=telemetry)
     cost0 = carry.cost
     alpha_, tol_ = jnp.float32(alpha), jnp.float32(tol)
     patience_, max_iters_ = jnp.int32(patience), jnp.int32(max_iters)
@@ -401,6 +418,7 @@ def solve(
             allowed_e, allowed_c,
             length=min(_SOLVE_CHUNK, max_iters - steps), scaled=scaled,
             solver=solver, blocked=blocked, accel=accel, app_mask=app_mask,
+            telemetry=telemetry,
         )
         cost_chunks.append(cs)
         res_chunks.append(rs)
@@ -412,21 +430,23 @@ def solve(
         cost_history=jnp.concatenate([cost0[None], *cost_chunks]),
         residual_history=jnp.concatenate(res_chunks) if res_chunks else jnp.zeros((0,)),
         iterations=int(carry.iters),
+        telemetry=carry.tb if telemetry is not None else None,
     ).trim()
 
 
 @functools.partial(jax.jit,
                    static_argnames=("length", "scaled", "solver", "blocked",
-                                    "accel"))
+                                    "accel", "telemetry"))
 def _scan_chunk_batched(
     inst, carry, alpha, tol, patience, max_iters, allowed_e, allowed_c,
     *, length: int, scaled: bool = False, solver: str = "auto",
-    blocked: str = "bitset", accel=None, app_mask=None,
+    blocked: str = "bitset", accel=None, app_mask=None, telemetry=None,
 ):
     def one(i, c, ae, ac, am):
         return _scan_chunk(i, c, alpha, tol, patience, max_iters, ae, ac,
                            length=length, scaled=scaled, solver=solver,
-                           blocked=blocked, accel=accel, app_mask=am)
+                           blocked=blocked, accel=accel, app_mask=am,
+                           telemetry=telemetry)
 
     return jax.vmap(one)(inst, carry, allowed_e, allowed_c, app_mask)
 
@@ -450,6 +470,7 @@ def solve_batched(
     solver: str = "auto",
     blocked: str = "bitset",
     accel=None,
+    telemetry=None,
 ) -> GPScan:
     """Solve a whole scenario family (a ``batch.pad_instances`` pytree with
     a leading batch axis) in one vmapped device program.
@@ -495,9 +516,12 @@ def solve_batched(
     """
     B = int(binst.adj.shape[0])
     accel = engine.resolve_accel(accel)
+    telemetry = engine.resolve_telemetry(telemetry)
     if phi0 is None:
         phi0 = jax.vmap(init_phi)(binst)
-    carry = jax.vmap(lambda i, p: _init_carry(i, p, accel=accel))(binst, phi0)
+    carry = jax.vmap(
+        lambda i, p: _init_carry(i, p, accel=accel, telemetry=telemetry)
+    )(binst, phi0)
     alpha_, tol_ = jnp.float32(alpha), jnp.float32(tol)
     patience_, max_iters_ = jnp.int32(patience), jnp.int32(max_iters)
 
@@ -510,6 +534,8 @@ def solve_batched(
     out_cost = np.asarray(carry.cost).copy()
     out_res = np.full((B,), np.inf, np.float32)
     out_iters = np.zeros((B,), np.int32)
+    ring = telemetry.ring if telemetry is not None else 0
+    out_tb = np.zeros((B, ring, engine.TEL_WIDTH), np.float32)
     written = np.zeros((B,), np.int64)     # history filled up to this step
 
     ids = np.arange(B)                      # lane -> original member (-1: pad)
@@ -541,7 +567,7 @@ def solve_batched(
         carry, (cs, rs) = _scan_chunk_batched(
             inst_p, carry, alpha_, tol_, patience_, max_iters_, ae_p, ac_p,
             length=length, scaled=scaled, solver=solver, blocked=blocked,
-            accel=accel,
+            accel=accel, telemetry=telemetry,
         )
         valid = ids >= 0
         vids = ids[valid]
@@ -562,6 +588,11 @@ def solve_batched(
             out_cost[rids] = np.asarray(carry.cost)[retiring]
             out_res[rids] = np.asarray(carry.residual)[retiring]
             out_iters[rids] = np.asarray(carry.iters)[retiring]
+            if telemetry is not None:
+                # rings snapshot at retirement only (same rationale as phi:
+                # active lanes would overwrite, and compaction re-packs
+                # lanes — original-id indexing happens here, once)
+                out_tb[rids] = np.asarray(carry.tb)[retiring]
 
         active = valid & ~done
         n_act = int(active.sum())
@@ -598,6 +629,7 @@ def solve_batched(
         cost_history=jnp.asarray(cost_hist),
         residual_history=jnp.asarray(res_hist),
         iterations=jnp.asarray(out_iters),
+        telemetry=jnp.asarray(out_tb) if telemetry is not None else None,
     )
 
 

@@ -103,7 +103,7 @@ def tagged_scan_dense(route: jnp.ndarray, improper: jnp.ndarray
 # ---------------------------------------------------------------------------
 
 def tagged_packed(route_bits: jnp.ndarray, improper_bits: jnp.ndarray,
-                  V: int) -> jnp.ndarray:
+                  V: int, *, with_rounds: bool = False):
     """Packed frontier propagation: (B, Vp, W) uint32 x2 -> (B, V) bool.
 
     Runs word-wise OR-AND rounds under a ``while_loop`` that stops when the
@@ -111,6 +111,11 @@ def tagged_packed(route_bits: jnp.ndarray, improper_bits: jnp.ndarray,
     ``diameter + 1`` rounds of the routing DAG instead of always V.  The
     round cap V + 1 is unreachable for any input (each round before the
     fixed point tags >= 1 new node) but bounds the loop for the compiler.
+
+    ``with_rounds=True`` additionally returns the loop's round counter —
+    the number of sweeps until the whole batch settled (the frontier-depth
+    telemetry column, DESIGN.md §19).  The counter already drives the
+    early exit; returning it changes no propagation arithmetic.
     """
     B, Vp, W = route_bits.shape
 
@@ -129,8 +134,12 @@ def tagged_packed(route_bits: jnp.ndarray, improper_bits: jnp.ndarray,
 
     tb0 = jnp.zeros((B, W), jnp.uint32)
     sentinel = jnp.full((B, W), jnp.uint32(0xFFFFFFFF))
-    tb, _, _ = jax.lax.while_loop(cond, body, (tb0, sentinel, jnp.int32(0)))
-    return unpack_bits(tb, V)
+    tb, _, rounds = jax.lax.while_loop(
+        cond, body, (tb0, sentinel, jnp.int32(0)))
+    tagged = unpack_bits(tb, V)
+    if with_rounds:
+        return tagged, rounds
+    return tagged
 
 
 # ---------------------------------------------------------------------------

@@ -318,20 +318,26 @@ def sparse_chain_solve(topo: SparseTopo, phi_e: jnp.ndarray,
     return x.reshape(base.shape)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("with_rounds",))
 def blocked_tagged_nbr(route: jnp.ndarray, improper: jnp.ndarray,
-                       nbr: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+                       nbr: jnp.ndarray, mask: jnp.ndarray, *,
+                       with_rounds: bool = False):
     """Neighbor-list variant of ``blocked_tagged``: O(E) per round.
 
     route/improper (..., V, V) bool, nbr/mask (V, D) -> tagged (..., V)
     bool, bit-equal to ``blocked_tagged`` and the dense scan (the fixed
     point is the same monotone map; see kernels/sparse_solve.py).
+    ``with_rounds=True`` also returns the sweep's round counter (§19
+    telemetry — the counter already exists in the while-loop).
     """
     flat, lead = _flatten_batch(route, 2)
     V = flat.shape[-1]
     idx = jnp.broadcast_to(nbr, flat.shape[:-1] + nbr.shape[-1:])
     rv = jnp.take_along_axis(flat, idx, axis=-1) & mask
     iv = jnp.take_along_axis(improper.reshape(flat.shape), idx, axis=-1)
+    if with_rounds:
+        tagged, rounds = _ss.tagged_nbr(rv, iv, nbr, with_rounds=True)
+        return tagged.reshape(lead + (V,)), rounds
     tagged = _ss.tagged_nbr(rv, iv, nbr)
     return tagged.reshape(lead + (V,))
 
@@ -347,9 +353,10 @@ def blocked_tagged_nbr(route: jnp.ndarray, improper: jnp.ndarray,
 _BITSET_PALLAS_MIN_V = 4096
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "with_rounds"))
 def blocked_tagged(route: jnp.ndarray, improper: jnp.ndarray, *,
-                   use_pallas: Optional[bool] = None) -> jnp.ndarray:
+                   use_pallas: Optional[bool] = None,
+                   with_rounds: bool = False):
     """Category-3 "tagged node" flags of the blocked sets B_i(a,k).
 
     route, improper (..., V, V) bool -> tagged (..., V) bool: node p is
@@ -363,6 +370,10 @@ def blocked_tagged(route: jnp.ndarray, improper: jnp.ndarray, *,
     exit at the routing-DAG diameter — exactly equal to the seed's dense
     V-round sweep, at ~1/32 the traffic and ~diameter/V the rounds
     (kernels/blocked_sets.py).
+
+    ``with_rounds=True`` additionally returns the sweep's round counter
+    (§19 telemetry).  The Pallas path runs its loop in-kernel and does not
+    expose the counter — it reports -1 (not measured).
     """
     flat, lead = _flatten_batch(route, 2)
     V = flat.shape[-1]
@@ -373,9 +384,16 @@ def blocked_tagged(route: jnp.ndarray, improper: jnp.ndarray, *,
     imp_bits = jnp.pad(_bset.pack_bits(imp_flat), row_pad)
     pallas = (_PALLAS_DEFAULT and V >= _BITSET_PALLAS_MIN_V
               if use_pallas is None else use_pallas)
+    rounds = jnp.int32(-1)
     if pallas:
         tagged = _bset.tagged_pallas(route_bits, imp_bits, V,
                                      interpret=INTERPRET)
+    elif with_rounds:
+        tagged, rounds = _bset.tagged_packed(route_bits, imp_bits, V,
+                                             with_rounds=True)
     else:
         tagged = _bset.tagged_packed(route_bits, imp_bits, V)
-    return tagged.reshape(lead + (V,))
+    tagged = tagged.reshape(lead + (V,))
+    if with_rounds:
+        return tagged, rounds
+    return tagged

@@ -254,7 +254,7 @@ def chain_solve_bsr(bvals: jnp.ndarray, blk_nbr: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def tagged_nbr(route_vals: jnp.ndarray, improper_vals: jnp.ndarray,
-               nbr: jnp.ndarray) -> jnp.ndarray:
+               nbr: jnp.ndarray, *, with_rounds: bool = False):
     """Category-3 tagged flags by O(E)-per-round sweeps on neighbor lists.
 
     route_vals/improper_vals (..., V, D) bool — ``route``/``improper``
@@ -267,6 +267,10 @@ def tagged_nbr(route_vals: jnp.ndarray, improper_vals: jnp.ndarray,
     The map is monotone (tagged only grows), so the ``!=`` early exit is
     exact: the result is bit-equal to the dense V-round scan and the bitset
     sweep, at O(E) per round instead of O(V^2)(/32) (DESIGN.md §18).
+
+    ``with_rounds=True`` additionally returns the sweep's existing round
+    counter (rounds until the fixed point settled — telemetry, §19);
+    propagation arithmetic is unchanged.
     """
     V = route_vals.shape[-2]
     seed = jnp.any(route_vals & improper_vals, axis=-1)       # (..., V)
@@ -281,5 +285,8 @@ def tagged_nbr(route_vals: jnp.ndarray, improper_vals: jnp.ndarray,
         return hit, t, i + 1
 
     prev0 = jnp.zeros_like(seed)
-    t, _, _ = jax.lax.while_loop(cond, body, (seed, prev0, jnp.int32(1)))
+    t, _, rounds = jax.lax.while_loop(
+        cond, body, (seed, prev0, jnp.int32(1)))
+    if with_rounds:
+        return t, rounds
     return t

@@ -1,0 +1,20 @@
+"""Solver observability layer (DESIGN.md §19).
+
+Three layers, from device to report:
+
+  * :mod:`repro.obs.device`  — the on-device iteration ring riding the GP
+    scan carry (``TelemetryConfig``, zero extra host syncs, bit-identical
+    when off);
+  * :mod:`repro.obs.metrics` / :mod:`repro.obs.spans` — host-side fleet
+    metrics and nested spans with a Chrome-trace/perfetto exporter;
+  * :mod:`repro.obs.report`  — ``python -m repro.obs.report`` turns a
+    recorded trace (``benchmarks/online_bench.py --trace-out``) into a
+    per-member convergence timeline + fleet summary under ``results/``.
+"""
+
+from repro.obs.device import (            # noqa: F401
+    COLUMNS, DEFAULT_TELEMETRY, TEL_WIDTH, TelemetryConfig, empty_ring,
+    records_to_dicts, resolve_telemetry, ring_overflow, ring_valid,
+)
+from repro.obs.metrics import Metrics, collect_compile_caches  # noqa: F401
+from repro.obs.spans import Tracer, load_chrome                # noqa: F401

@@ -1,0 +1,148 @@
+"""On-device iteration telemetry: the ring riding the GP scan carry (§19).
+
+The solver's inner loop is a jitted ``lax.scan`` with an on-device
+early-stop latch (DESIGN.md §10) — by design it never syncs to host, which
+also means nothing inside it is observable.  This module adds the one
+mechanism that can see inside without breaking that property: a fixed-size
+``(R, TEL_WIDTH)`` float32 ring buffer that travels IN the scan carry,
+written once per committed iteration, and drained on host only at the
+chunk boundaries the drivers already sync at.
+
+Invariants the whole layer leans on:
+
+  * **Zero extra host syncs.**  The ring is a carry leaf like the §15
+    Anderson buffers; recording is a single masked ``.at[idx].set`` per
+    iteration.  Draining happens where ``carry.done`` is already read.
+  * **``telemetry=None`` is bit-identical.**  Exactly like the accel
+    fields, the ring is a zero-size ``(0, TEL_WIDTH)`` placeholder when
+    telemetry is off and the scan body never touches it — the compiled
+    program is the same one shipped today.
+  * **Telemetry ON is also trajectory-identical.**  Every recorded column
+    is a value the step already computed (cost, residual, winning rung,
+    Anderson verdict, phi movement); the only *new* computation is
+    returning the blocked-set sweep's existing round counter.  Parity is
+    asserted on the Table II scenarios (tests/test_obs.py).
+  * **Write index = ``carry.iters``.**  The carry's committed-iteration
+    counter increments exactly when a record is written (both are masked
+    by the ``done`` freeze) and is zeroed by ``engine.reset_carry``
+    alongside the ring, so records ``[0 : min(iters, R))`` are always the
+    valid prefix.  Iterations past ``R`` keep counting but stop writing —
+    truncation, not wrap-around, so ``iters - R`` is the exact number of
+    dropped tail records (:func:`ring_overflow`).
+  * **Shard-identical under ``shard_map``.**  Every column is replicated
+    by construction (cost/residual/alpha/rung derive from the psum-reduced
+    F/G; the sweep round counter and phi delta are pmax-reduced by the
+    engine), so the ring travels with a replicated PartitionSpec and no
+    per-shard gather is needed.
+
+This module is imported by ``core/engine.py`` and therefore depends on
+nothing but JAX/numpy — keep it that way.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# Record layout: one (TEL_WIDTH,) float32 row per committed iteration.
+TEL_WIDTH = 8
+COL_ITER = 0        # 0-based committed-iteration index
+COL_COST = 1        # committed cost after this iteration
+COL_RESIDUAL = 2    # committed sufficiency residual
+COL_ALPHA = 3       # stepsize the winning ladder rung used
+COL_RUNG = 4        # winning rung index in the evaluated ladder
+COL_ANDERSON = 5    # 1 = mix accepted, 0 = rejected, -1 = mixer off
+COL_BS_ROUNDS = 6   # blocked-set frontier rounds to fixed point (-1: n/a)
+COL_PHI_DELTA = 7   # max|dphi| of the committed move
+
+COLUMNS = ("iter", "cost", "residual", "alpha", "rung", "anderson",
+           "bs_rounds", "phi_delta")
+
+
+class TelemetryConfig(NamedTuple):
+    """Static telemetry toggles, mirroring :class:`engine.AccelConfig`.
+
+    Hashable (ints/bools only) so it rides as a jit static argument and an
+    ``lru_cache`` key for the mesh chunk programs; each distinct config
+    compiles its own program, exactly like ``solver=``/``accel=``.
+
+      ring       ring capacity in records; iterations past it are counted
+                 but not recorded (truncation — see :func:`ring_overflow`)
+      bs_rounds  also return the blocked-set sweep's frontier round
+                 counter (the counter already exists inside the sweep
+                 while-loops; this only plumbs it out)
+    """
+
+    ring: int = 256
+    bs_rounds: bool = True
+
+
+DEFAULT_TELEMETRY = TelemetryConfig()
+
+
+def resolve_telemetry(telemetry) -> Optional[TelemetryConfig]:
+    """None/False -> None (no ring, bit-identical legacy programs);
+    True/"default"/"on" -> :data:`DEFAULT_TELEMETRY`; a
+    :class:`TelemetryConfig` passes through."""
+    if telemetry is None or telemetry is False:
+        return None
+    if telemetry is True or telemetry in ("default", "on"):
+        return DEFAULT_TELEMETRY
+    if isinstance(telemetry, TelemetryConfig):
+        return telemetry
+    raise TypeError(
+        f"telemetry must be None/bool/'default'/TelemetryConfig, "
+        f"got {telemetry!r}")
+
+
+def empty_ring(telemetry: Optional[TelemetryConfig]) -> jnp.ndarray:
+    """Fresh carry ring: ``(ring, TEL_WIDTH)`` zeros, ``(0, TEL_WIDTH)``
+    when telemetry is off (the zero-size placeholder pattern the §15 accel
+    fields use — fixed pytree structure per static config)."""
+    R = telemetry.ring if telemetry is not None else 0
+    return jnp.zeros((R, TEL_WIDTH), jnp.float32)
+
+
+def ring_record(tb: jnp.ndarray, slot: jnp.ndarray, row: jnp.ndarray,
+                write: jnp.ndarray) -> jnp.ndarray:
+    """Masked ring write: put ``row`` at ``slot`` when ``write`` and the
+    slot is within capacity; otherwise return the ring unchanged.
+
+    Callers must only invoke this with a non-empty ring (telemetry on) —
+    the off path never touches the placeholder.  ``slot`` saturates at the
+    last index so the lane stays in bounds when the ring has overflowed;
+    the ``write`` mask then keeps the stale row.
+    """
+    R = tb.shape[0]
+    idx = jnp.minimum(slot, R - 1)
+    keep = write & (slot < R)
+    return tb.at[idx].set(jnp.where(keep, row, tb[idx]))
+
+
+def ring_valid(tb, iters) -> np.ndarray:
+    """Host-side drain: the valid record prefix ``[0 : min(iters, R))``
+    as a ``(n, TEL_WIDTH)`` numpy array (copy — safe to keep after the
+    carry moves on)."""
+    R = int(np.asarray(tb).shape[0])
+    n = min(int(iters), R)
+    return np.asarray(tb[:n]).copy()
+
+
+def ring_overflow(tb, iters) -> int:
+    """How many committed iterations were NOT recorded (truncated tail)."""
+    R = int(np.asarray(tb).shape[0])
+    return max(0, int(iters) - R)
+
+
+def records_to_dicts(records: np.ndarray) -> list[dict]:
+    """(n, TEL_WIDTH) -> one JSON-friendly dict per record."""
+    out = []
+    for row in np.asarray(records):
+        d = {name: float(v) for name, v in zip(COLUMNS, row)}
+        d["iter"] = int(d["iter"])
+        d["rung"] = int(d["rung"])
+        d["bs_rounds"] = int(d["bs_rounds"])
+        out.append(d)
+    return out

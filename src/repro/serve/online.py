@@ -86,6 +86,8 @@ as BENCH_gp.json online rows; ``tests/test_online.py`` pins the semantics.
 from __future__ import annotations
 
 import dataclasses
+import time
+from contextlib import nullcontext
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -96,6 +98,7 @@ from repro.core import (baselines, batch, conditions, engine, events, gp,
                         traffic)
 from repro.core.network import Instance
 from repro.core.traffic import Phi
+from repro.obs.device import records_to_dicts, ring_overflow, ring_valid
 
 # Corrupt-class invariant thresholds (DESIGN.md §17): the GP projection and
 # repair_phi keep simplex rows normalized to float32 roundoff (~1e-6) and
@@ -163,6 +166,11 @@ class HealthReport(EventReport):
     quarantined: bool = False
     injected: Optional[str] = None
     shed: tuple = ()
+    # watchdog accounting (§19): ``rung_iters`` is the per-rung iteration
+    # spend, parallel to ``rungs`` (empty on the healthy path); ``wall_s``
+    # is the host wall-clock the whole event took, solve + guardrails.
+    rung_iters: tuple = ()
+    wall_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,6 +244,9 @@ class OnlineSolver:
         rollback_margin: float = 1e-4,
         debug: bool = False,
         fault_injector=None,
+        telemetry=None,
+        metrics=None,
+        tracer=None,
     ):
         self._members = events.pad_fleet(insts, spare_apps=spare_apps)
         self.binst: Instance = jax.tree_util.tree_map(
@@ -261,6 +272,16 @@ class OnlineSolver:
         self.rollback_margin = float(rollback_margin)
         self.debug = bool(debug)
         self.fault_injector = fault_injector
+        # §19 observability hooks, all optional and off by default:
+        # ``telemetry`` turns on the on-device iteration ring (drained into
+        # ``iter_trace`` at the chunk boundaries the service already syncs
+        # on); ``metrics`` (a repro.obs.Metrics) takes fleet counters;
+        # ``tracer`` (a repro.obs.Tracer) records nested event spans.
+        self._telemetry = engine.resolve_telemetry(telemetry)
+        self.metrics = metrics
+        self.tracer = tracer
+        self.iter_trace: list[dict] = []
+        self._segments = 0                 # drained solve segments
         self._accel = engine.resolve_accel(accel)
         self._alpha = jnp.float32(alpha)
         self._tol = jnp.float32(tol)
@@ -279,14 +300,16 @@ class OnlineSolver:
 
         phi0 = jax.vmap(gp.init_phi)(self.binst)
         self.carry: engine.ScanCarry = jax.vmap(
-            lambda i, p: engine.init_carry(i, p, accel=self._accel)
+            lambda i, p: engine.init_carry(i, p, accel=self._accel,
+                                           telemetry=self._telemetry)
         )(self.binst, phi0)
 
         self.total_iters = 0                       # all committed iterations
         self.reports: list[EventReport] = []
         self.ladder_hits: dict[str, int] = {}      # escalation-rung counters
         self.quarantines = 0
-        self.cold_iters, _ = self._converge(list(range(self.B)))
+        self.cold_iters, _ = self._converge(list(range(self.B)),
+                                            phase="cold-start")
         self.event_iters = 0                       # iterations after cold start
         # Last-known-good checkpoints: the cold solve is the first LKG.
         self._lkg_phi: list[Phi] = [self.phi(b) for b in range(self.B)]
@@ -359,6 +382,21 @@ class OnlineSolver:
 
     def process(self, ev: events.Event) -> HealthReport:
         """Ingest one event and re-converge its member incrementally."""
+        t0 = time.perf_counter()
+        with self._span(f"event:{type(ev).__name__}", tid=ev.member,
+                        member=ev.member, index=len(self.reports)):
+            rep = self._process(ev, t0)
+        if self.metrics is not None:
+            self.metrics.counter(f"online.event.{type(ev).__name__}")
+            self.metrics.observe("online.event.iters", rep.iterations)
+            self.metrics.observe("online.event.wall_s", rep.wall_s)
+            if rep.rolled_back:
+                self.metrics.counter("online.rollback")
+            if rep.shed:
+                self.metrics.counter("online.shed", len(rep.shed))
+        return rep
+
+    def _process(self, ev: events.Event, t0: float) -> HealthReport:
         b = ev.member
         injected = None
         if self.fault_injector is not None:
@@ -420,11 +458,14 @@ class OnlineSolver:
                 done=jnp.asarray(True),
                 residual=jnp.float32(res.max(initial=0.0)))
             self._scatter_carry(b, carry_b)
+            self._count("online.gate.skip")
+            self._instant("gate-skip", tid=b, member=b)
             return self._finish(
                 ev, b, inst_b, incumbent, iters=0, solved=0,
                 skipped=int(live.sum()), unfroze=0, repaired=repaired,
                 keep=keep, cold_restart=False, rungs=(), served="gp",
-                converged=True, injected=injected, shed=eff.shed)
+                converged=True, injected=injected, shed=eff.shed,
+                rung_iters=(), t0=t0)
 
         self._scatter_carry(b, carry_b)
         am = active
@@ -447,7 +488,8 @@ class OnlineSolver:
             # warm round with the plateau probe: bail early if the repaired
             # strategy turns out to be a spurious near-fixed point
             it, plateaued = self._converge([b], app_mask=am[None, :],
-                                           plateau_res=self.plateau_res)
+                                           plateau_res=self.plateau_res,
+                                           phase="warm")
             iters_total += int(it[0])
             if not np.isfinite(float(self.carry.cost[b])):
                 # the repaired strategy exceeded some link capacity and the
@@ -467,9 +509,10 @@ class OnlineSolver:
                 plateaued = True
         if plateaued:
             cold_restart = True
+            self._count("online.cold_restart")
             self._reset_member(b, seed_phi, keep_window=False)
             am = live.copy()          # a cold start moves every live app
-            it, _ = self._converge([b], app_mask=am[None, :])
+            it, _ = self._converge([b], app_mask=am[None, :], phase="cold")
             iters_total += int(it[0])
 
         res = np.asarray(self._residual_fn(inst_b, self.phi(b)))
@@ -479,9 +522,11 @@ class OnlineSolver:
                 break
             # congestion moved under gate-frozen apps: unfreeze and go again
             unfroze += int(drifted.sum())
+            self._count("online.unfreeze", int(drifted.sum()))
             am = am | drifted
             self._reset_member(b, self.phi(b), keep_window=True)
-            it, _ = self._converge([b], app_mask=am[None, :])
+            it, _ = self._converge([b], app_mask=am[None, :],
+                                   phase="unfreeze")
             iters_total += int(it[0])
             res = np.asarray(self._residual_fn(inst_b, self.phi(b)))
 
@@ -489,10 +534,11 @@ class OnlineSolver:
         # -- / true budget exhaustion
         served = "gp"
         rungs: tuple = ()
+        rung_iters: tuple = ()
         served_cost = float(self.carry.cost[b])
         converged = self._certificate(b)
         if self._needs_escalation(b, served_cost, incumbent):
-            extra, rungs, served, converged = self._escalate(
+            extra, rungs, rung_iters, served, converged = self._escalate(
                 b, inst_b, seed_phi, live, incumbent,
                 already_cold=cold_restart)
             iters_total += extra
@@ -503,7 +549,8 @@ class OnlineSolver:
             solved=int(am.sum()), skipped=int((live & ~am).sum()),
             unfroze=unfroze, repaired=repaired, keep=keep,
             cold_restart=cold_restart, rungs=rungs, served=served,
-            converged=converged, injected=injected, shed=eff.shed)
+            converged=converged, injected=injected, shed=eff.shed,
+            rung_iters=rung_iters, t0=t0)
 
     def step(self, evs: Sequence[events.Event]) -> list[HealthReport]:
         """Ingest a list of events in order (the trace-replay entry point)."""
@@ -544,8 +591,9 @@ class OnlineSolver:
 
     def _escalate(self, b: int, inst_b: Instance, seed_phi: Phi,
                   live: np.ndarray, incumbent: float, *,
-                  already_cold: bool) -> tuple[int, tuple, str, bool]:
-        """Climb the degradation ladder; returns (iterations, rungs, served).
+                  already_cold: bool) -> tuple[int, tuple, tuple, str, bool]:
+        """Climb the degradation ladder; returns (iterations, rungs,
+        rung_iters, served, converged).
 
         Rungs, each on a backoff budget: ``warm`` (continue from the live
         strategy, Anderson window kept), ``warm-clear`` (window zeroed — a
@@ -554,12 +602,14 @@ class OnlineSolver:
         ``baseline:<SPOC|LCOF>`` (mask-restricted solve from
         ``baselines.fallback_strategy`` — always feasible).  The best
         finite candidate wins iff it beats the incumbent, else the
-        incumbent is rolled back in; returns (iterations, rungs, served,
-        converged) where ``served`` is one of
-        "gp" / "baseline" / "incumbent" / "none".
+        incumbent is rolled back in; ``served`` is one of
+        "gp" / "baseline" / "incumbent" / "none".  ``rung_iters`` is the
+        per-rung iteration spend, parallel to ``rungs`` (§19 watchdog
+        accounting).
         """
         extra = 0
         rungs: list[str] = []
+        rung_iters: list[int] = []
         am = live[None, :]
         margin = 1 + self.rollback_margin
 
@@ -578,11 +628,13 @@ class OnlineSolver:
                 allowed=None, is_baseline: bool = False) -> dict:
             nonlocal extra
             self.ladder_hits[rung] = self.ladder_hits.get(rung, 0) + 1
+            self._count(f"online.rung.{rung}")
             rungs.append(rung)
             self._reset_member(b, phi0, keep_window=keep_w)
             it, _ = self._converge([b], app_mask=am, max_iters=budget,
-                                   allowed=allowed)
+                                   allowed=allowed, phase=f"rung:{rung}")
             extra += int(it[0])
+            rung_iters.append(int(it[0]))
             c = measure(rung, is_baseline)
             cands.append(c)
             return c
@@ -612,7 +664,7 @@ class OnlineSolver:
                     allowed=(allowed_e, allowed_c), is_baseline=True)
 
         served, converged = self._serve_best(b, inst_b, cands, incumbent)
-        return extra, tuple(rungs), served, converged
+        return extra, tuple(rungs), tuple(rung_iters), served, converged
 
     def _serve_best(self, b: int, inst_b: Instance, cands: list[dict],
                     incumbent: float) -> tuple[str, bool]:
@@ -651,18 +703,21 @@ class OnlineSolver:
         name, allowed_e, allowed_c, phi0, _ = fb
         self.ladder_hits[f"quarantine:{name}"] = \
             self.ladder_hits.get(f"quarantine:{name}", 0) + 1
+        self._count("online.quarantine")
         live = np.asarray(inst_b.stage_mask).any(axis=1)
         self._reset_member(b, phi0, keep_window=False)
         it, _ = self._converge([b], app_mask=live[None, :],
                                max_iters=max(1, self.max_iters // 4),
-                               allowed=(allowed_e, allowed_c))
+                               allowed=(allowed_e, allowed_c),
+                               phase="quarantine")
         return int(it[0])
 
     def _finish(self, ev, b: int, inst_b: Instance, incumbent: float, *,
                 iters: int, solved: int, skipped: int, unfroze: int,
                 repaired: bool, keep: bool, cold_restart: bool,
                 rungs: tuple, served: str, converged: bool,
-                injected: Optional[str], shed: tuple) -> HealthReport:
+                injected: Optional[str], shed: tuple,
+                rung_iters: tuple = (), t0: float = 0.0) -> HealthReport:
         """Verdict + LKG update + (debug) invariant check, one report."""
         quarantined = False
         if self.debug and served != "none":
@@ -700,9 +755,51 @@ class OnlineSolver:
             cold_restart=cold_restart, converged=converged, status=status,
             rungs=tuple(rungs), incumbent_cost=incumbent,
             rolled_back=(served == "incumbent"), quarantined=quarantined,
-            injected=injected, shed=tuple(shed))
+            injected=injected, shed=tuple(shed),
+            rung_iters=tuple(rung_iters),
+            wall_s=(time.perf_counter() - t0) if t0 else 0.0)
         self.reports.append(rep)
         return rep
+
+    # -- observability plumbing (§19) -----------------------------------
+
+    def _span(self, name: str, *, tid: int = 0, **args):
+        """Nested tracer span, or a no-op when no tracer is attached."""
+        if self.tracer is None:
+            return nullcontext()
+        return self.tracer.span(name, tid=tid, **args)
+
+    def _instant(self, name: str, *, tid: int = 0, **args) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(name, tid=tid, **args)
+
+    def _count(self, name: str, n: int = 1) -> None:
+        if self.metrics is not None:
+            self.metrics.counter(name, n)
+
+    def _drain_ring(self, b: int, tb, iters: int, phase: str) -> None:
+        """Move one solve segment's ring rows into ``iter_trace``.
+
+        Called at the end of every ``_converge`` — the chunk boundary where
+        the service host-syncs anyway, so the transfer adds no device round
+        trips.  Each record is tagged with the member, the event index
+        being processed (-1 during the construction cold start), the phase
+        label (warm/cold/unfreeze/rung:*/...) and a monotone segment id.
+        Must run BEFORE any ``reset_carry`` zeroes the ring.
+        """
+        if self._telemetry is None:
+            return
+        n = int(iters)
+        rows = ring_valid(tb, n)
+        dropped = ring_overflow(tb, n)
+        if dropped and self.metrics is not None:
+            self.metrics.counter("telemetry.ring.dropped", dropped)
+        ev_idx = -1 if phase == "cold-start" else len(self.reports)
+        seg = self._segments
+        self._segments += 1
+        for rec in records_to_dicts(rows):
+            rec.update(member=b, event=ev_idx, phase=phase, segment=seg)
+            self.iter_trace.append(rec)
 
     # -- internals ------------------------------------------------------
 
@@ -773,6 +870,7 @@ class OnlineSolver:
                   plateau_res: Optional[float] = None,
                   max_iters: Optional[int] = None,
                   allowed=None,
+                  phase: str = "solve",
                   ) -> tuple[np.ndarray, bool]:
         """Run the affected members to convergence through the batched
         chunk programs; returns (per-member committed iteration counts,
@@ -793,7 +891,8 @@ class OnlineSolver:
         """
         if len(members) == 1:
             return self._converge_one(members[0], app_mask, plateau_res,
-                                      max_iters=max_iters, allowed=allowed)
+                                      max_iters=max_iters, allowed=allowed,
+                                      phase=phase)
         assert allowed is None, "direction masks are single-member only"
         n = len(members)
         bucket = batch.next_pow2(n)
@@ -816,7 +915,7 @@ class OnlineSolver:
                 inst_s, state["carry"], self._alpha, self._tol,
                 self._patience, self._max_iters, None, None, length=length,
                 solver=self.solver, blocked=self.blocked,
-                accel=self._accel, app_mask=am)
+                accel=self._accel, app_mask=am, telemetry=self._telemetry)
             done = np.asarray(state["carry"].done)
             if bool(done.all()):
                 return True, float("inf")
@@ -825,14 +924,19 @@ class OnlineSolver:
             probe = float(res[running].min()) if running.any() else float("inf")
             return False, probe
 
-        plateaued = self._chunk_schedule(advance, plateau_res=plateau_res,
-                                         max_iters=max_iters)
+        with self._span(phase, members=list(members)):
+            plateaued = self._chunk_schedule(advance, plateau_res=plateau_res,
+                                             max_iters=max_iters)
         carry_s = state["carry"]
         upd = jnp.asarray(list(members))
         self.carry = jax.tree_util.tree_map(
             lambda full, part: full.at[upd].set(part[:n]),
             self.carry, carry_s)
         iters = np.asarray(carry_s.iters[:n]).copy()
+        if self._telemetry is not None:
+            tb_h = np.asarray(carry_s.tb)       # (bucket, R, W) one transfer
+            for i, m in enumerate(members):
+                self._drain_ring(m, tb_h[i], int(iters[i]), phase)
         self.total_iters += int(iters.sum())
         return iters, plateaued
 
@@ -840,6 +944,7 @@ class OnlineSolver:
                       plateau_res: Optional[float],
                       max_iters: Optional[int] = None,
                       allowed=None,
+                      phase: str = "solve",
                       ) -> tuple[np.ndarray, bool]:
         """Single-member convergence through the unbatched chunk program
         (bit-identical arithmetic to ``gp.solve``).  ``allowed`` carries
@@ -858,13 +963,15 @@ class OnlineSolver:
                 inst_b, state["carry"], self._alpha, self._tol,
                 self._patience, self._max_iters, ae, ac, length=length,
                 solver=self.solver, blocked=self.blocked,
-                accel=self._accel, app_mask=am)
+                accel=self._accel, app_mask=am, telemetry=self._telemetry)
             return bool(state["carry"].done), float(state["carry"].residual)
 
-        plateaued = self._chunk_schedule(advance, plateau_res=plateau_res,
-                                         max_iters=max_iters)
+        with self._span(phase, tid=b, member=b):
+            plateaued = self._chunk_schedule(advance, plateau_res=plateau_res,
+                                             max_iters=max_iters)
         carry_b = state["carry"]
         self._scatter_carry(b, carry_b)
         iters = np.asarray([int(carry_b.iters)], np.int32)
+        self._drain_ring(b, np.asarray(carry_b.tb), int(iters[0]), phase)
         self.total_iters += int(iters.sum())
         return iters, plateaued
